@@ -1,0 +1,120 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python) so
+their wall time is meaningless; what we benchmark is (a) the pure-jnp
+reference path wall time (the compute the kernels replace), and (b) the
+analytic FLOPs each call covers (derived column = GFLOP/call) so per-chip
+TPU time = derived / 197e12 at peak.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+KEY = jax.random.PRNGKey(0)
+
+
+def timeit(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_flash() -> None:
+    from repro.kernels.flash_attention.ref import attention_ref
+    b, h, kv, s, d = 1, 8, 8, 1024, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kv, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kv, s, d), jnp.float32)
+    fn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us = timeit(fn, q, k, v)
+    gflop = 2 * 2 * b * h * s * s / 2 * d / 1e9
+    emit(f"kernel/flash_attention/b{b}h{h}s{s}d{d}", us, f"{gflop:.2f}")
+
+
+def bench_decode() -> None:
+    from repro.kernels.decode_attention.ref import decode_ref
+    b, kv, g, s, d = 8, 8, 4, 8192, 64
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, kv, g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kv, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kv, s, d), jnp.float32)
+    pos = jnp.full((b,), s - 1)
+    fn = jax.jit(lambda q, k, v, p: decode_ref(q, k, v, p))
+    us = timeit(fn, q, k, v, pos)
+    gflop = 2 * 2 * b * kv * g * s * d / 1e9
+    emit(f"kernel/decode_attention/b{b}kv{kv}s{s}", us, f"{gflop:.2f}")
+
+
+def bench_rglru() -> None:
+    from repro.kernels.rglru_scan.ref import rglru_ref
+    b, t, w = 4, 2048, 1024
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, t, w)))
+    bb = jax.random.normal(ks[1], (b, t, w)) * 0.1
+    h0 = jax.random.normal(ks[2], (b, w))
+    fn = jax.jit(lambda a, b_, h: rglru_ref(a, b_, h)[0])
+    us = timeit(fn, a, bb, h0)
+    gb = 3 * b * t * w * 4 / 1e9
+    emit(f"kernel/rglru_scan/b{b}t{t}w{w}", us, f"{gb:.3f}GB")
+
+
+def bench_moe() -> None:
+    from repro.kernels.moe_matmul.ref import moe_matmul_ref
+    e, c, d, f = 16, 256, 512, 1024
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (e, c, d), jnp.float32)
+    w = jax.random.normal(ks[1], (e, d, f), jnp.float32)
+    fn = jax.jit(moe_matmul_ref)
+    us = timeit(fn, x, w)
+    gflop = 2 * e * c * d * f / 1e9
+    emit(f"kernel/moe_matmul/e{e}c{c}d{d}f{f}", us, f"{gflop:.2f}")
+
+
+def bench_conv() -> None:
+    from repro.kernels.conv2d.ref import conv2d_ref
+    n, hw, cin, cout, k = 8, 27, 96, 256, 5
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (n, hw, hw, cin))
+    w = jax.random.normal(ks[1], (k, k, cin, cout)) * 0.1
+    b = jnp.zeros((cout,))
+    fn = jax.jit(lambda x, w, b: conv2d_ref(x, w, b, padding=2))
+    us = timeit(fn, x, w, b)
+    gflop = 2 * n * hw * hw * k * k * cin * cout / 1e9
+    emit(f"kernel/conv2d/alexnet-conv2", us, f"{gflop:.2f}")
+
+
+def bench_mlstm() -> None:
+    from repro.models.recurrent import (mlstm_init, mlstm_seq,
+                                        mlstm_seq_ref, mlstm_state)
+    p = mlstm_init(KEY, 256, 4, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1024, 256))
+    st = mlstm_state(2, 4, 64)
+    fn_c = jax.jit(lambda p, x, s: mlstm_seq(p, x, s, chunk=128)[0])
+    fn_r = jax.jit(lambda p, x, s: mlstm_seq_ref(p, x, s)[0])
+    us_c = timeit(fn_c, p, x, st, iters=3)
+    us_r = timeit(fn_r, p, x, st, iters=3)
+    emit("kernel/mlstm_chunkwise/b2s1024d256", us_c,
+         f"seq_ref={us_r:.0f}us speedup={us_r / us_c:.1f}x")
+
+
+def main() -> None:
+    bench_flash()
+    bench_decode()
+    bench_rglru()
+    bench_moe()
+    bench_conv()
+    bench_mlstm()
+
+
+if __name__ == "__main__":
+    main()

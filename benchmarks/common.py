@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: CSV emission + timed planner runs."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import numpy as np
+
+from repro.core import (HeuristicPlanner, LLHRPlanner, RandomPlanner,
+                        RadioChannel, RadioParams, cnn_cost, make_devices)
+from repro.configs.lenet import LENET
+from repro.configs.alexnet import ALEXNET
+
+MODELS = {"lenet": LENET, "alexnet": ALEXNET}
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def run_planner(planner_kind: str, model: str, n_uavs: int, requests: int,
+                params: RadioParams, seed: int = 0, t: int = 0):
+    """-> (plan, wall_us).  planner_kind in {llhr, heuristic, random}."""
+    ch = RadioChannel(params)
+    mc = cnn_cost(MODELS[model])
+    devs = make_devices(n_uavs)
+    reqs = list(np.arange(requests) % n_uavs)
+    t0 = time.perf_counter()
+    if planner_kind == "llhr":
+        plan, _ = LLHRPlanner(ch, position_steps=60, seed=seed).plan(
+            mc, devs, reqs)
+    elif planner_kind == "heuristic":
+        plan, _ = HeuristicPlanner(ch).plan(mc, devs, reqs, t=t)
+    else:
+        plan, _ = RandomPlanner(ch, seed=seed).plan(mc, devs, reqs, t=t)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    return plan, wall_us

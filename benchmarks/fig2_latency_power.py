@@ -1,0 +1,31 @@
+"""Fig. 2 — average latency vs P_max, for different #UAVs and bandwidths.
+
+Paper claims reproduced: latency falls as P_max rises (longer reliable
+links become usable), as #UAVs rises (more placement freedom), and as
+bandwidth rises (faster reliable links)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_planner
+from repro.core import RadioParams
+
+PMAX_MW = (20, 40, 60, 80, 100, 120)
+UAVS = (4, 6, 8)
+BW_MHZ = (10, 20)
+REQUESTS = 6
+
+
+def main() -> None:
+    for bw in BW_MHZ:
+        for n in UAVS:
+            for pmax in PMAX_MW:
+                params = RadioParams(p_max_watts=pmax * 1e-3,
+                                     bandwidth_hz=bw * 1e6)
+                plan, wall = run_planner("llhr", "alexnet", n, REQUESTS,
+                                         params)
+                lat = plan.total_latency / REQUESTS
+                emit(f"fig2/bw={bw}MHz/uavs={n}/pmax={pmax}mW", wall,
+                     f"{lat:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig. 3 — average latency vs per-UAV memory cap, for 5-layer LeNet and
+8-layer AlexNet under different request counts (the eq. 11a sweep)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (LLHRPlanner, RadioChannel, cnn_cost, make_devices)
+from repro.configs.alexnet import ALEXNET
+from repro.configs.lenet import LENET
+
+import time
+
+# lowest point per model sits just above the swarm-infeasibility knee
+# (below it sum_r m_j exceeds total swarm memory and no placement exists)
+MEM_FRACS = {"lenet": (4e-4, 7e-4, 1e-3, 1.0),
+             "alexnet": (0.4, 0.55, 0.75, 1.0)}
+REQUESTS = (4, 8)
+
+
+def main() -> None:
+    ch = RadioChannel()
+    for model, cfg in (("lenet", LENET), ("alexnet", ALEXNET)):
+        mc = cnn_cost(cfg)
+        for rq in REQUESTS:
+            for mf in MEM_FRACS[model]:
+                devs = make_devices(6, mem_frac=mf)
+                t0 = time.perf_counter()
+                plan, _ = LLHRPlanner(ch, position_steps=60).plan(
+                    mc, devs, list(np.arange(rq) % 6))
+                wall = (time.perf_counter() - t0) * 1e6
+                lat = plan.total_latency / rq
+                emit(f"fig3/{model}/requests={rq}/mem_frac={mf}", wall,
+                     f"{lat:.4f}")
+
+
+if __name__ == "__main__":
+    main()

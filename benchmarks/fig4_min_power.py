@@ -1,0 +1,23 @@
+"""Fig. 4 — average minimum transmit power for reliable intermediate-data
+transfer vs bandwidth, #UAVs and CNN model."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_planner
+from repro.core import RadioParams
+
+BW_MHZ = (10, 15, 20)
+UAVS = (4, 6, 8)
+
+
+def main() -> None:
+    for model in ("lenet", "alexnet"):
+        for n in UAVS:
+            for bw in BW_MHZ:
+                params = RadioParams(bandwidth_hz=bw * 1e6)
+                plan, wall = run_planner("llhr", model, n, 4, params)
+                emit(f"fig4/{model}/uavs={n}/bw={bw}MHz", wall,
+                     f"{plan.total_power * 1e3:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 5 — average latency vs number of requests: LLHR vs the heuristic
+(static path) and random-selection baselines."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_planner
+from repro.core import RadioParams
+
+REQUESTS = (2, 4, 8, 16, 25)
+PLANNERS = ("llhr", "heuristic", "random")
+
+
+def main() -> None:
+    params = RadioParams()
+    for planner in PLANNERS:
+        for rq in REQUESTS:
+            plan, wall = run_planner(planner, "alexnet", 6, rq, params)
+            lat = plan.total_latency / rq
+            emit(f"fig5/{planner}/requests={rq}", wall, f"{lat:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Benchmark harness — one module per paper figure + kernel microbench.
+
+Prints ``name,us_per_call,derived`` CSV.  The dry-run/roofline benchmark
+(reports/dryrun) is driven separately by scripts/run_dryrun_all.sh since
+it needs a 512-device process.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, fig2_latency_power,
+                            fig3_latency_memory, fig4_min_power,
+                            fig5_request_scaling)
+    print("name,us_per_call,derived")
+    for mod in (fig2_latency_power, fig3_latency_memory, fig4_min_power,
+                fig5_request_scaling, bench_kernels):
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

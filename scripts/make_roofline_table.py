@@ -1,0 +1,78 @@
+"""Render EXPERIMENTS.md roofline tables from reports/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["minicpm-2b", "gemma2-9b", "phi4-mini-3.8b", "qwen1.5-4b",
+         "xlstm-350m", "recurrentgemma-9b", "whisper-tiny", "qwen2-vl-2b",
+         "granite-moe-1b-a400m", "olmoe-1b-7b"]
+
+
+def load(dir_):
+    recs = {}
+    for f in os.listdir(dir_):
+        if not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(dir_, f)))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def table(recs, mesh):
+    rows = []
+    hdr = ("| arch | shape | mem/dev | compute | memory | collective | "
+           "bottleneck | MODEL_FLOPS | useful | note |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for arch in ARCHS:
+        for shape in ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r.get("skipped"):
+                rows.append(f"| {arch} | {shape} | — | — | — | — | — | — |"
+                            f" — | N/A: full attention (DESIGN.md) |")
+                continue
+            if not r.get("ok"):
+                rows.append(f"| {arch} | {shape} | FAIL | | | | | | | "
+                            f"{r.get('error', '')[:40]} |")
+                continue
+            ro = r["roofline"]
+            mem = r["memory"].get("total_bytes_per_device", 0) / 2 ** 30
+            note = ""
+            rows.append(
+                f"| {arch} | {shape} | {mem:.1f}GiB "
+                f"| {fmt_s(ro['compute_s'])} | {fmt_s(ro['memory_s'])} "
+                f"| {fmt_s(ro['collective_s'])} | {ro['bottleneck']} "
+                f"| {ro['model_flops']:.2e} | {ro['useful_ratio']:.2f} "
+                f"| {note} |")
+    return "\n".join(rows)
+
+
+def main():
+    dir_ = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun"
+    recs = load(dir_)
+    n_ok = sum(1 for r in recs.values() if r.get("ok"))
+    n_skip = sum(1 for r in recs.values() if r.get("skipped"))
+    n_fail = sum(1 for r in recs.values()
+                 if r.get("ok") is False and not r.get("skipped"))
+    print(f"<!-- {n_ok} ok / {n_skip} skipped / {n_fail} failed -->\n")
+    for mesh, label in (("16x16", "single-pod 16x16 (256 chips)"),
+                        ("2x16x16", "multi-pod 2x16x16 (512 chips)")):
+        print(f"### Mesh {label}\n")
+        print(table(recs, mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — LLHR distributed-inference framework (JAX/TPU)."""
+__version__ = "0.1.0"

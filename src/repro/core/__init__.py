@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution (LLHR joint optimization)."""
+from repro.core.channel import ICIChannel, ICIParams, RadioChannel, RadioParams
+from repro.core.cost_model import (LayerCost, ModelCost, arch_cost, cnn_cost,
+                                   model_flops)
+from repro.core.placement import (Device, PlacementProblem,
+                                  PlacementSolution, solve_bnb, solve_brute,
+                                  solve_chain_dp, solve_chain_dp_minmax,
+                                  solve_greedy, solve_random)
+from repro.core.planner import LLHRPlanner, Plan
+from repro.core.power import PowerSolution, solve_power
+from repro.core.positions import (chain_oracle, hex_init, solve_positions,
+                                  assign_stages_to_torus)
+from repro.core.baselines import HeuristicPlanner, RandomPlanner
+from repro.core.swarm import (SwarmSim, average_latency, average_power,
+                              make_devices)
+from repro.core.pipeline_opt import (StagePlan, pipeline_efficiency,
+                                     plan_pipeline, stage_devices)
+
+__all__ = [
+    "RadioChannel", "RadioParams", "ICIChannel", "ICIParams",
+    "LayerCost", "ModelCost", "arch_cost", "cnn_cost", "model_flops",
+    "Device", "PlacementProblem", "PlacementSolution",
+    "solve_bnb", "solve_brute", "solve_chain_dp", "solve_chain_dp_minmax", "solve_greedy",
+    "solve_random", "LLHRPlanner", "Plan", "PowerSolution", "solve_power",
+    "chain_oracle", "hex_init", "solve_positions", "assign_stages_to_torus",
+    "HeuristicPlanner", "RandomPlanner", "SwarmSim", "average_latency",
+    "average_power", "make_devices", "StagePlan", "pipeline_efficiency",
+    "plan_pipeline", "stage_devices",
+]

@@ -1,0 +1,191 @@
+"""P2 — UAV position optimization (eq. 8-9).
+
+    min_{S}  sum_i  (sigma^2/h0) * (2^(K/(B tau)) - 1) * d_{i,k}^2
+    s.t.     x_i^2 + y_i^2 <= R^2            (coverage circle, eq. 8c)
+             d_{i,k} >= 2R                    (anti-collision, eq. 8d)
+             per-link power <= p_max          (eq. 9a)
+
+This is a QCQP in the pairwise distances.  We solve it with projected
+gradient descent in JAX (the objective and both constraint projections are
+differentiable almost everywhere), initialized from a hexagonal packing —
+plus an analytic oracle for the chain topology (collinear at exactly 2R) used
+by the tests.  A discrete variant assigns stages to torus coordinates for
+the TPU analogue (quadratic assignment, greedy + 2-opt).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import ICIChannel, RadioChannel
+
+
+@dataclass(frozen=True)
+class PositionSolution:
+    positions: np.ndarray        # [U, 2]
+    objective: float             # total power proxy (eq. 9)
+    iterations: int
+    max_violation: float         # residual constraint violation (m)
+
+
+# ---------------------------------------------------------------------------
+# Continuous QCQP (the paper's P2)
+# ---------------------------------------------------------------------------
+
+
+def hex_init(n: int, spacing: float, center: Tuple[float, float] = (0., 0.),
+             jitter: float = 0.0, seed: int = 0) -> np.ndarray:
+    """Hexagonal close packing init: densest arrangement respecting d >= 2R."""
+    pts: List[Tuple[float, float]] = []
+    rows = int(math.ceil(math.sqrt(n))) + 2
+    dy = spacing * math.sqrt(3.0) / 2.0
+    for r in range(rows):
+        for c in range(rows):
+            x = c * spacing + (spacing / 2.0 if r % 2 else 0.0)
+            pts.append((x, r * dy))
+            if len(pts) >= n * 4:
+                break
+    arr = np.asarray(pts[:max(n * 4, n)], dtype=np.float64)
+    arr -= arr.mean(axis=0)
+    order = np.argsort((arr ** 2).sum(axis=1))
+    out = arr[order[:n]] + np.asarray(center)
+    if jitter:
+        rng = np.random.default_rng(seed)
+        out = out + rng.normal(scale=jitter, size=out.shape)
+    return out
+
+
+def _pairwise_sq(pos: jnp.ndarray) -> jnp.ndarray:
+    diff = pos[:, None, :] - pos[None, :, :]
+    return (diff ** 2).sum(-1)
+
+
+def solve_positions(n_uavs: int,
+                    channel: RadioChannel,
+                    radius: float = 20.0,
+                    area_center: Tuple[float, float] = (0.0, 0.0),
+                    links: Optional[np.ndarray] = None,
+                    steps: int = 800,
+                    lr: float = 0.5,
+                    seed: int = 0) -> PositionSolution:
+    """Projected gradient descent on eq. (9).
+
+    ``links``: [U,U] bool — which pairs exchange data (default: chain
+    i -> i+1, the placement pipeline's shape).  Objective weight per link is
+    the eq. (9) power coefficient; minimizing sum of coeff * d^2.
+    """
+    U = n_uavs
+    if links is None:
+        links = np.zeros((U, U), dtype=bool)
+        for i in range(U - 1):
+            links[i, i + 1] = True
+    links_j = jnp.asarray(links | links.T)
+    p = channel.params
+    coeff = (channel.noise() / p.h0) * \
+        (math.exp(p.packet_bits * math.log(2.0) /
+                  (p.bandwidth_hz * p.tau)) - 1.0)
+    two_r = 2.0 * radius
+    center = jnp.asarray(area_center)
+    # coverage circle big enough to hold a 2R-separated packing
+    cover_r = max(radius, two_r * (math.sqrt(float(U)) + 1.0))
+
+    @jax.jit
+    def step(pos, _):
+        def objective(pos):
+            d2 = _pairwise_sq(pos)
+            obj = jnp.sum(jnp.where(links_j, coeff * d2, 0.0)) / 2.0
+            # separation penalty (eq. 8d), smooth hinge
+            eye = jnp.eye(U, dtype=bool)
+            viol = jnp.maximum(two_r ** 2 - d2, 0.0)
+            pen = jnp.sum(jnp.where(eye, 0.0, viol ** 2))
+            return obj + 10.0 * coeff * pen
+        g = jax.grad(objective)(pos)
+        pos = pos - lr * g / (jnp.linalg.norm(g) + 1e-12)
+        # project onto the coverage circle (eq. 8c)
+        rel = pos - center
+        r = jnp.linalg.norm(rel, axis=1, keepdims=True)
+        pos = center + rel * jnp.minimum(1.0, cover_r / jnp.maximum(r, 1e-9))
+        return pos, objective(pos)
+
+    pos0 = jnp.asarray(hex_init(U, two_r, area_center, jitter=0.5, seed=seed))
+    pos, objs = jax.lax.scan(step, pos0, jnp.arange(steps))
+    pos = np.array(pos)   # writable copy
+    # hard repair of residual separation violations (push-apart passes)
+    for _ in range(50):
+        d = np.sqrt(((pos[:, None] - pos[None, :]) ** 2).sum(-1))
+        np.fill_diagonal(d, np.inf)
+        i, k = np.unravel_index(np.argmin(d), d.shape)
+        if d[i, k] >= two_r - 1e-6:
+            break
+        mid = (pos[i] + pos[k]) / 2.0
+        dir_ = pos[i] - pos[k]
+        nrm = np.linalg.norm(dir_) + 1e-9
+        pos[i] = mid + dir_ / nrm * (radius + 1e-3)
+        pos[k] = mid - dir_ / nrm * (radius + 1e-3)
+    d = np.sqrt(((pos[:, None] - pos[None, :]) ** 2).sum(-1))
+    np.fill_diagonal(d, np.inf)
+    viol = max(0.0, two_r - float(d.min()))
+    d2 = np.where(np.isfinite(d), d, 0.0) ** 2
+    obj = float(np.sum(np.where(links | links.T, coeff * d2, 0.0)) / 2.0)
+    return PositionSolution(pos, obj, steps, viol)
+
+
+def chain_oracle(n: int, radius: float,
+                 center: Tuple[float, float] = (0.0, 0.0)) -> np.ndarray:
+    """Analytic optimum for a chain: collinear, consecutive spacing = 2R."""
+    xs = (np.arange(n) - (n - 1) / 2.0) * 2.0 * radius
+    return np.stack([xs + center[0], np.full(n, center[1])], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Discrete torus placement (TPU analogue of P2)
+# ---------------------------------------------------------------------------
+
+
+def assign_stages_to_torus(n_stages: int, traffic: np.ndarray,
+                           channel: ICIChannel,
+                           sweeps: int = 4) -> List[Tuple[int, int]]:
+    """Place ``n_stages`` stage groups on the pod torus minimizing
+    hop-weighted traffic (quadratic assignment; greedy + pairwise 2-opt).
+
+    ``traffic[i, k]`` = bytes/step stage i sends to stage k.
+    """
+    tx, ty = channel.params.torus
+    coords = [(x, y) for x in range(tx) for y in range(ty)]
+    assert n_stages <= len(coords)
+    # greedy: walk stages in chain order along a snake path (hop=1 neighbours)
+    snake: List[Tuple[int, int]] = []
+    for x in range(tx):
+        col = [(x, y) for y in range(ty)]
+        snake.extend(col if x % 2 == 0 else col[::-1])
+    placement = snake[:n_stages]
+
+    def cost(pl: Sequence[Tuple[int, int]]) -> float:
+        c = 0.0
+        for i in range(n_stages):
+            for k in range(n_stages):
+                if traffic[i, k] > 0:
+                    c += channel.transfer_time(traffic[i, k],
+                                               channel.hops(pl[i], pl[k]))
+        return c
+
+    best = cost(placement)
+    for _ in range(sweeps):                      # 2-opt improvement
+        improved = False
+        for i in range(n_stages):
+            for k in range(i + 1, n_stages):
+                pl = list(placement)
+                pl[i], pl[k] = pl[k], pl[i]
+                c = cost(pl)
+                if c < best - 1e-12:
+                    placement, best = pl, c
+                    improved = True
+        if not improved:
+            break
+    return list(placement)

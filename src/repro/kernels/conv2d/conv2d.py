@@ -1,0 +1,86 @@
+"""Conv2D-as-im2col Pallas TPU kernel (the paper's CNN compute hot spot).
+
+A direct CUDA-style conv doesn't map to the TPU: the MXU wants dense
+matmuls.  The TPU-native lowering is im2col — patches are laid out as a
+[N*OH*OW, KH*KW*C] matrix (done in ops.py with XLA gathers) and this
+kernel runs the tiled patches @ weights matmul with fused bias + ReLU,
+accumulating in fp32 VMEM scratch.  Eq. (1) of the paper counts exactly
+these MACs, so kernel flops == cost-model flops by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
+                   k_blocks: int, relu: bool):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == k_blocks - 1)
+    def _finalize():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def matmul_bias_act(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+                    relu: bool = True, block_m: int = DEFAULT_BLOCK_M,
+                    block_n: int = DEFAULT_BLOCK_N,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """[M, K] @ [K, N] + b[N] (fused ReLU) -> [M, N]."""
+    m, k = x.shape
+    n = w.shape[1]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    # zero-pad partial tiles: padding contributes 0 to the accumulation
+    pm = (-m) % block_m
+    pn = (-n) % block_n
+    pk = (-k) % block_k
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    if pn:
+        b = jnp.pad(b, (0, pn))
+    m_p, k_p = x.shape
+    n_p = w.shape[1]
+    k_blocks = pl.cdiv(k_p, block_k)
+    grid = (pl.cdiv(m_p, block_m), pl.cdiv(n_p, block_n), k_blocks)
+    kernel = functools.partial(_matmul_kernel, k_blocks=k_blocks, relu=relu)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_n,), lambda mi, ni, ki: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m_p, n_p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b)
+    return out[:m, :n]

@@ -1,0 +1,44 @@
+"""Jit'd conv wrapper: im2col layout (XLA gather) + Pallas tiled matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d.conv2d import matmul_bias_act
+from repro.kernels.conv2d.ref import conv2d_ref
+
+
+def _im2col(x: jnp.ndarray, kh: int, kw: int, stride: int,
+            padding: int) -> jnp.ndarray:
+    """x [N,H,W,C] -> patches [N*OH*OW, KH*KW*C]."""
+    n, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding),
+                        (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                x, (0, i, j, 0),
+                (n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1)))
+    patches = jnp.stack(cols, axis=3)          # [N,OH,OW,KH*KW,C]
+    return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+           stride: int = 1, padding: int = 0, relu: bool = True,
+           use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """im2col conv: x [N,H,W,C]; w [KH,KW,C,OC] -> [N,OH,OW,OC]."""
+    if not use_kernel:
+        return conv2d_ref(x, w, b, stride=stride, padding=padding,
+                          relu=relu)
+    kh, kw, c, oc = w.shape
+    patches, (n, oh, ow) = _im2col(x, kh, kw, stride, padding)
+    w2 = w.reshape(kh * kw * c, oc)
+    y = matmul_bias_act(patches, w2, b, relu=relu, interpret=interpret)
+    return y.reshape(n, oh, ow, oc)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the conv2d kernel (direct XLA convolution)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+               stride: int = 1, padding: int = 0,
+               relu: bool = True) -> jnp.ndarray:
+    """x [N,H,W,C]; w [KH,KW,C,OC]; b [OC] -> [N,OH,OW,OC]."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+               relu: bool = True) -> jnp.ndarray:
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b
+    y = jnp.maximum(y, 0.0) if relu else y
+    return y.astype(x.dtype)

@@ -1,0 +1,99 @@
+"""Flash-decode Pallas TPU kernel: one query token per sequence against a
+long KV cache, tiled over KV blocks with an online-softmax accumulator.
+
+Grid (batch, kv_head, kv_blocks); the q block holds all G = H/KV query
+heads of one kv head ([G, D] — G x D fits a VMEM tile; for GQA G is 1-8 so
+the qk product is a skinny (G x D) @ (D x Bk) matmul, which is the same
+shape the TPU flash-decode kernels use).  Validity mask comes from the
+current position (flat cache) — rolling-window caches pass a precomputed
+per-slot validity vector instead.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, cap: float, block_k: int, kv_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)            # [Bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[0]                               # scalar current position
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    slot = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(slot <= pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "scale", "block_k",
+                                             "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, *, cap: float = 0.0,
+                     scale: float | None = None,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q [B,KV,G,D]; k/v [B,KV,S,D]; pos [B] -> out [B,KV,G,D]."""
+    b, kv, g, d = q.shape
+    s = k.shape[2]
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    block_k = min(block_k, s)
+    kv_blocks = pl.cdiv(s, block_k)
+    grid = (b, kv, kv_blocks)
+    kernel = functools.partial(_decode_kernel, scale=scale, cap=cap,
+                               block_k=block_k, kv_blocks=kv_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,)),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, ki: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q, k, v)

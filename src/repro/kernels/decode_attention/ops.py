@@ -1,0 +1,25 @@
+"""Jit'd wrapper: model-layout adapter for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_ref
+
+
+def decode_mha(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+               pos: jnp.ndarray, *, cap: float = 0.0,
+               use_kernel: bool = True, interpret: bool = True
+               ) -> jnp.ndarray:
+    """q [B,1,H,D]; caches [B,S,KV,D]; pos [B] -> [B,1,H,D]."""
+    b, _, h, d = q.shape
+    kv = k_cache.shape[2]
+    qg = q[:, 0].reshape(b, kv, h // kv, d)
+    kt = jnp.swapaxes(k_cache, 1, 2)               # [B,KV,S,D]
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    if use_kernel:
+        out = decode_attention(qg, kt, vt, pos, cap=cap,
+                               interpret=interpret)
+    else:
+        out = decode_ref(qg, kt, vt, pos, cap=cap)
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               pos: jnp.ndarray, *, cap: float = 0.0,
+               scale: float | None = None) -> jnp.ndarray:
+    """q [B,KV,G,D]; k/v [B,KV,S,D]; pos [B] -> [B,KV,G,D]."""
+    d = q.shape[-1]
+    s = k.shape[2]
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    logits = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cap:
+        logits = jnp.tanh(logits / cap) * cap
+    valid = jnp.arange(s)[None, :] <= pos[:, None]          # [B, S]
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,122 @@
+"""Flash attention Pallas TPU kernel (prefill / train).
+
+Online-softmax attention tiled for VMEM: grid (batch, q_heads, q_blocks,
+kv_blocks) with running (m, l, acc) scratch carried across the kv-block
+grid dimension (TPU grids iterate the trailing dim innermost, so the
+scratch is a per-(b,h,qb) accumulator).  Supports causal masking, local
+(sliding-window) masking, logit softcap and GQA (kv-head index map =
+q_head // group).
+
+Block shapes are VMEM-tiled: q (1,1,Bq,D), k/v (1,1,Bk,D); the MXU sees
+(Bq x D) @ (D x Bk) and (Bq x Bk) @ (Bk x D) matmuls — Bq/Bk default 128
+to align with the 128x128 systolic array.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, cap: float,
+                  block_q: int, block_k: int, kv_blocks: int,
+                  seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [Bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)            # [Bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    ok = k_pos < seq_len
+    if causal:
+        ok &= q_pos >= k_pos
+    if window:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [Bq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # [Bq, Bk]
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "cap", "scale",
+                              "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, cap: float = 0.0,
+                    scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q [B,H,S,D]; k/v [B,KV,S,D] (KV divides H) -> [B,H,S,D]."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    q_blocks = pl.cdiv(s, block_q)
+    kv_blocks = pl.cdiv(s, block_k)
+    grid = (b, h, q_blocks, kv_blocks)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_k=block_k, kv_blocks=kv_blocks, seq_len=s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper: model-layout adapter for the flash kernel.
+
+Models carry activations as [B, S, H, D]; the kernel wants [B, H, S, D].
+``use_kernel=False`` (or non-TPU backends without interpret) falls back to
+the oracle — this is the switch the serving/training stack flips on real
+hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, window: int = 0, cap: float = 0.0,
+        use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """q [B,S,H,D]; k/v [B,S,KV,D] -> [B,S,H,D]."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if use_kernel:
+        ot = flash_attention(qt, kt, vt, causal=causal, window=window,
+                             cap=cap, interpret=interpret)
+    else:
+        ot = attention_ref(qt, kt, vt, causal=causal, window=window,
+                           cap=cap)
+    return jnp.swapaxes(ot, 1, 2)

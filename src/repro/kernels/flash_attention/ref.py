@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0, cap: float = 0.0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q [B,H,S,D]; k/v [B,KV,S,D] -> [B,H,S,D] (fp32 math)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    k = jnp.repeat(k, h // kv, axis=1)
+    v = jnp.repeat(v, h // kv, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cap:
+        logits = jnp.tanh(logits / cap) * cap
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window:
+        ok &= q_pos - k_pos < window
+    logits = jnp.where(ok, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

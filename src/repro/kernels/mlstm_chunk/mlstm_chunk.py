@@ -1,0 +1,126 @@
+"""Chunkwise mLSTM Pallas TPU kernel.
+
+The xLSTM mLSTM cell is sequential on GPUs without fused kernels; the TPU
+adaptation (see repro.models.recurrent.mlstm_chunk_math for the math and
+derivation) reformulates it as per-chunk [L,L] masked matmuls with an
+(C, n, m) state carried across chunks.  Grid (batch, heads, chunks): the
+chunk dim iterates innermost so the state lives in VMEM scratch for the
+whole sequence.  Gate cumulatives (b = cumsum log f, a = i - b,
+M = cummax a) are precomputed in ops.py — inside the kernel everything is
+MXU matmuls + elementwise VPU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_BIG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, a_ref, b_ref, mx_ref, o_ref,
+                  c_ref, n_ref, m_ref, *, chunks: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)            # [L, D] (pre-scaled)
+    k = k_ref[0, 0, 0].astype(jnp.float32)
+    v = v_ref[0, 0, 0].astype(jnp.float32)
+    a = a_ref[0, 0, 0].astype(jnp.float32)            # [L]  i - cumsum(logf)
+    b = b_ref[0, 0, 0].astype(jnp.float32)            # [L]  cumsum(logf)
+    m_cum = mx_ref[0, 0, 0].astype(jnp.float32)       # [L]  cummax(a)
+    m0 = m_ref[0, 0]
+
+    mx = jnp.maximum(m0, m_cum)                    # [L]
+    m_t = b + mx
+    inter_scale = jnp.exp(m0 - mx)                 # [L]
+    # W[t, s] = exp(a_s - mx_t) for s <= t
+    w = jnp.exp(a[None, :] - mx[:, None])
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(tri, w, 0.0)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    sw = scores * w                                # [L, L]
+    intra = jax.lax.dot_general(sw, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    inter = jax.lax.dot_general(q, c_ref[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        * inter_scale[:, None]
+    num = inter + intra                            # [L, D]
+    den_raw = jnp.sum(sw, axis=1) + \
+        jnp.sum(q * n_ref[...], axis=1) * inter_scale
+    den = jnp.maximum(jnp.abs(den_raw), jnp.exp(-m_t))
+    o_ref[0, 0, 0] = (num / den[:, None]).astype(o_ref.dtype)
+
+    # state update at chunk end
+    mx_e = mx[-1]
+    decay = jnp.exp(a - mx_e)                      # [L]
+    carry = jnp.exp(m0 - mx_e)
+    c_ref[...] = carry * c_ref[...] + jax.lax.dot_general(
+        k * decay[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = carry * n_ref[...] + jnp.sum(k * decay[:, None], axis=0)
+    m_ref[0, 0] = b[-1] + mx_e
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                i_pre: jnp.ndarray, f_pre: jnp.ndarray, *,
+                chunk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """q,k,v [B,H,S,D] (q pre-scaled by 1/sqrt(D)); gates [B,H,S].
+
+    Returns h [B,H,S,D].  State starts at zero (fresh sequence).
+    """
+    bsz, h, s, d = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, "seq must divide into chunks"
+    nc = s // chunk
+    log_f = -jax.nn.softplus(-f_pre.astype(jnp.float32))
+    b_cum = jnp.cumsum(log_f.reshape(bsz, h, nc, chunk), axis=-1)
+    a = i_pre.astype(jnp.float32).reshape(bsz, h, nc, chunk) - b_cum
+    m_cum = jax.lax.cummax(a, axis=3)
+    grid = (bsz, h, nc)
+    kernel = functools.partial(_mlstm_kernel, chunks=nc, chunk=chunk)
+
+    def reshape4(t):
+        return t.reshape(bsz, h, nc, chunk, d)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, d),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, d),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, d),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, 1, chunk),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, 1, chunk),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, d),
+                               lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, nc, chunk, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),
+            pltpu.VMEM((d,), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(reshape4(q), reshape4(k), reshape4(v), a, b_cum, m_cum)
+    return out.reshape(bsz, h, s, d)
+
+

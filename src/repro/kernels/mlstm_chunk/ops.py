@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the chunkwise mLSTM kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels.mlstm_chunk.mlstm_chunk import mlstm_chunk
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+
+
+def mlstm(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          i_pre: jnp.ndarray, f_pre: jnp.ndarray, *, chunk: int = 128,
+          use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """q,k,v [B,H,S,D] (unscaled q); gates [B,H,S] -> h [B,H,S,D]."""
+    q = q * (1.0 / math.sqrt(q.shape[-1]))
+    if use_kernel:
+        return mlstm_chunk(q, k, v, i_pre, f_pre, chunk=chunk,
+                           interpret=interpret)
+    return mlstm_ref(q, k, v, i_pre, f_pre)

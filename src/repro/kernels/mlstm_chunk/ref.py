@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the chunkwise mLSTM kernel: the exact sequential
+recurrence (same math as repro.models.recurrent.mlstm_seq_ref)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              i_pre: jnp.ndarray, f_pre: jnp.ndarray) -> jnp.ndarray:
+    """q,k,v [B,H,S,D] (q pre-scaled); gates [B,H,S] -> h [B,H,S,D]."""
+    bsz, h, s, d = q.shape
+    C = jnp.zeros((bsz, h, d, d), jnp.float32)
+    n = jnp.zeros((bsz, h, d), jnp.float32)
+    m = jnp.full((bsz, h), -1e30, jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, ip, fp = inp
+        log_f = -jax.nn.softplus(-fp)
+        m_new = jnp.maximum(log_f + m, ip)
+        i_ = jnp.exp(ip - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * (
+            kt.astype(jnp.float32)[..., :, None] *
+            vt.astype(jnp.float32)[..., None, :])
+        n = f_[..., None] * n + i_[..., None] * kt.astype(jnp.float32)
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt.astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt.astype(jnp.float32))),
+            jnp.exp(-m_new))
+        return (C, n, m_new), (num / den[..., None]).astype(q.dtype)
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (q, k, v, i_pre, f_pre))
+    _, ys = jax.lax.scan(step, (C, n, m), xs)
+    return jnp.moveaxis(ys, 0, 2 - 1 + 1).transpose(1, 2, 0, 3) \
+        if False else jnp.transpose(ys, (1, 2, 0, 3))

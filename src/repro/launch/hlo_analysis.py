@@ -1,0 +1,385 @@
+"""Static HLO profiler for the dry-run.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any scanned
+model (layers scan, q-chunk scan, recurrent time scan) is undercounted by
+its trip count.  This module parses the optimized HLO text, builds the
+computation call graph, resolves loop trip counts from the loop-condition
+compare-against-constant, and accumulates:
+
+  * dot FLOPs           (2 * prod(result dims) * contracted size)
+  * HBM traffic          (operand+result bytes of top-level instructions;
+                          fusion internals are free, fusion boundaries paid)
+  * collective bytes     (same accounting as launch.roofline, x multiplier)
+
+each multiplied by the product of enclosing loop trip counts.  This is the
+"profile" of the §Perf loop: exact matmul flops, loop-aware.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,()TS]+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# opcodes that don't move HBM bytes at the top level
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "bitcast-convert", "after-all", "iota",
+             "partition-id", "replica-id", "rng-bit-generator"}
+
+
+def _parse_shapes(s: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dims = [int(x) for x in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _split_type_rest(s: str) -> Tuple[str, str]:
+    """'f32[2,3]{1,0} dot(%a, %b), attrs' -> (type_str, rest)."""
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                return s[:i + 1], s[i + 1:].strip()
+    i = s.find(" ")
+    return (s, "") if i < 0 else (s[:i], s[i + 1:].strip())
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+    const_val: Optional[int] = None
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("{" in line) and "->" in line:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        type_str, rest = _split_type_rest(rhs)
+        if "[" not in type_str and "(" not in type_str:
+            continue
+        pm = re.match(r"([\w\-]+)\((.*)", rest)
+        if not pm:
+            continue
+        opcode = pm.group(1)
+        # operand list: up to balanced close paren
+        tail = pm.group(2)
+        depth = 1
+        for i, ch in enumerate(tail):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                ops_str, attrs = tail[:i], tail[i + 1:]
+                break
+        else:
+            ops_str, attrs = tail, ""
+        operands = re.findall(r"%([\w.\-]+)", ops_str)
+        ins = Instr(name, opcode, type_str, operands, attrs)
+        if opcode == "constant":
+            cm = _CONST_RE.search(rest)
+            if cm:
+                ins.const_val = int(cm.group(1))
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps
+
+
+def _trip_count(cond: Computation, body: Optional[Computation] = None
+                ) -> int:
+    """Loop trips = ceil(limit / step).
+
+    limit: condition's compare(counter, constant) — possibly wrapped in a
+    kLoop fusion (%wrapped_compare = fusion(%gte, %constant)).
+    step: XLA's 'wide' double-buffering unrolls the body (2 copies of the
+    original ops) and bumps the counter by 2 while keeping the limit — so
+    the step is read off the body's counter update (ROOT tuple elem 0 <-
+    add/fusion(%counter, %constant))."""
+    limit = None
+    for ins in cond.instrs:
+        if ins.opcode not in ("compare", "fusion"):
+            continue
+        if ins.opcode == "fusion" and "compare" not in ins.attrs \
+                and "compare" not in ins.name:
+            continue
+        for op in ins.operands:
+            ref = cond.by_name.get(op)
+            if ref is not None and ref.const_val is not None:
+                limit = ref.const_val
+    if not limit or limit <= 0:
+        return 1
+    step = 1
+    if body is not None and body.instrs:
+        root = body.instrs[-1]
+        if root.opcode == "tuple" and root.operands:
+            name = root.operands[0]
+            for _ in range(6):               # follow copies to the update
+                ins = body.by_name.get(name)
+                if ins is None:
+                    break
+                if ins.opcode in ("copy", "bitcast", "convert") \
+                        and ins.operands:
+                    name = ins.operands[0]
+                    continue
+                if ins.opcode in ("add", "fusion"):
+                    for op in ins.operands:
+                        ref = body.by_name.get(op)
+                        if ref is not None and ref.const_val is not None \
+                                and 0 < ref.const_val <= limit:
+                            step = ref.const_val
+                break
+    import math
+    return max(1, math.ceil(limit / max(step, 1)))
+
+
+@dataclass
+class HloProfile:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+    pod_bytes: float = 0.0
+    loops: List[Tuple[str, int]] = field(default_factory=list)
+    dot_flops_by_loop: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    shapes = _parse_shapes(ins.result_type)
+    if not shapes:
+        return 0.0
+    _, rdims = shapes[0]
+    out = 1
+    for d in rdims:
+        out *= d
+    lhs = comp.by_name.get(ins.operands[0]) if ins.operands else None
+    contracted = 1
+    if lhs is not None:
+        lshapes = _parse_shapes(lhs.result_type)
+        if lshapes:
+            _, ldims = lshapes[0]
+            m = _DOT_DIMS_RE.search(ins.attrs)
+            if m and m.group(1):
+                for idx in m.group(1).split(","):
+                    i = int(idx)
+                    if i < len(ldims):
+                        contracted *= ldims[i]
+    return 2.0 * out * contracted
+
+
+def _coll_group(ins: Instr, pod_stride: Optional[int]) -> Tuple[int, bool]:
+    m = _GROUPS_IOTA_RE.search(ins.attrs)
+    if m:
+        n_groups, gsize = int(m.group(1)), int(m.group(2))
+        span = gsize if "T(" not in m.group(3) else n_groups * (gsize - 1) + 1
+        return gsize, bool(pod_stride) and span > pod_stride
+    m = _GROUPS_EXPL_RE.search(ins.attrs)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        crosses = bool(pod_stride) and \
+            len({i // pod_stride for i in ids}) > 1
+        return len(ids), crosses
+    return 1, False
+
+
+def profile(text: str, pod_group_stride: Optional[int] = None) -> HloProfile:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.replace("ENTRY", "").strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with a 'while' or the largest
+        entry = max(comps, key=lambda c: len(comps[c].instrs)) if comps \
+            else None
+    prof = HloProfile()
+    if entry is None:
+        return prof
+    seen: Dict[str, float] = {}
+    stack: List[Tuple[str, float, bool]] = [(entry, 1.0, True)]
+    while stack:
+        cname, mult, top_level = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        key = cname
+        if seen.get(key, -1.0) >= mult:
+            continue
+        seen[key] = mult
+        for ins in comp.instrs:
+            opc = ins.opcode
+            if opc == "dot":
+                f = _dot_flops(ins, comp) * mult
+                prof.dot_flops += f
+                prof.dot_flops_by_loop[cname] = \
+                    prof.dot_flops_by_loop.get(cname, 0.0) + f
+            if opc == "while":
+                wm = _WHILE_RE.search(ins.attrs)
+                if wm:
+                    trip = _trip_count(comps.get(wm.group(1),
+                                                 Computation("")),
+                                       comps.get(wm.group(2)))
+                    prof.loops.append((ins.name, trip))
+                    stack.append((wm.group(2), mult * trip, top_level))
+            elif opc == "fusion":
+                cm = _CALLS_RE.search(ins.attrs)
+                if cm:
+                    stack.append((cm.group(1), mult, False))
+            elif opc in ("call", "custom-call"):
+                cm = _TO_APPLY_RE.search(ins.attrs) or \
+                    _CALLS_RE.search(ins.attrs)
+                if cm:
+                    stack.append((cm.group(1), mult, False))
+            # conditional branches share the parent multiplier
+            elif opc == "conditional":
+                for br in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"(?:true|false)_computation=%?"
+                                     r"([\w.\-]+))", ins.attrs):
+                    for g in br:
+                        for nm in re.findall(r"%?([\w.\-]+)", g or ""):
+                            if nm in comps:
+                                stack.append((nm, mult, False))
+            # HBM traffic: top-level (entry + while bodies) only.
+            # Loop-body refinements (documented model):
+            #  * dynamic-update-slice writes touch only the updated slice;
+            #    across the whole loop that's the full buffer ONCE.
+            #  * dynamic-slice reads the slice per iteration (= buffer once
+            #    over the loop), not the full operand per iteration.
+            #  * operands < 16 MB inside a loop body are assumed
+            #    VMEM-resident (weights/state pinned across iterations).
+            if top_level and opc not in _FREE_OPS and opc != "while":
+                in_loop = mult > 1.0
+                # pure dtype converts fuse into their consumers on TPU
+                # (bf16<->f32 widening copies are a CPU-backend artifact)
+                if opc == "convert" or (opc == "fusion" and
+                                        "wrapped_convert" in ins.attrs):
+                    continue
+                res_bytes = _shape_bytes(_parse_shapes(ins.result_type))
+                is_dus = "dynamic-update-slice" in ins.name or \
+                    opc == "dynamic-update-slice"
+                is_ds = not is_dus and ("dynamic-slice" in ins.name or
+                                        opc == "dynamic-slice")
+                if is_dus and in_loop:
+                    # writes touch only the slice; whole buffer once/loop
+                    prof.traffic_bytes += 2.0 * res_bytes
+                elif is_ds:
+                    # slice read per iteration (~ full buffer once per loop)
+                    prof.traffic_bytes += 2.0 * res_bytes * mult
+                else:
+                    # VMEM-residency model: loop-body tensors under 64 MB
+                    # stay resident / are streamed once per loop pass;
+                    # larger tensors pay HBM every iteration — EXCEPT when
+                    # a big operand feeds a tiny result (>=64x smaller):
+                    # that is a scan xs-slice fused past recognition, and
+                    # its true cost is the array streamed once per loop.
+                    def eff(nb: float) -> float:
+                        if in_loop and (nb < (64 << 20) or
+                                        nb > 64 * max(res_bytes, 1)):
+                            return nb / mult
+                        return nb
+                    nbytes = res_bytes / mult \
+                        if (in_loop and res_bytes < (64 << 20)) else res_bytes
+                    for op in ins.operands:
+                        ref = comp.by_name.get(op)
+                        if ref is None or ref.opcode == "constant":
+                            continue
+                        nbytes += eff(
+                            _shape_bytes(_parse_shapes(ref.result_type)))
+                    prof.traffic_bytes += nbytes * mult
+            # collectives (wherever they appear)
+            for kind in _COLL_KINDS:
+                if opc == kind or opc == kind + "-start":
+                    shapes = _parse_shapes(ins.result_type)
+                    nbytes = _shape_bytes(shapes)
+                    # CPU backend promotes bf16 collectives to f32 via a
+                    # convert; a TPU moves bf16 on the wire.  Charge the
+                    # true payload dtype when the operand is a
+                    # convert-from-bf16.
+                    for op in ins.operands:
+                        ref = comp.by_name.get(op)
+                        if ref is not None and "convert" in \
+                                (ref.opcode + ref.name):
+                            src = comp.by_name.get(ref.operands[0]) \
+                                if ref.operands else None
+                            if src is not None and \
+                                    "bf16" in src.result_type:
+                                nbytes = nbytes // 2
+                                break
+                    gsize, crosses = _coll_group(ins, pod_group_stride)
+                    if kind == "all-reduce":
+                        nbytes *= 2
+                    elif kind == "reduce-scatter":
+                        nbytes *= max(gsize, 1)
+                    prof.coll_bytes[kind] = prof.coll_bytes.get(kind, 0.0) \
+                        + nbytes * mult
+                    prof.coll_count[kind] = prof.coll_count.get(kind, 0) \
+                        + int(mult)
+                    if crosses:
+                        prof.pod_bytes += nbytes * mult
+                    break
+    return prof

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because smoke tests run with 1 CPU
+device while the dry-run forces 512 host platform devices.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MULTI_POD_MESH, SINGLE_POD_MESH, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_from_config(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+def make_host_mesh(n_data: int = 0, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if n_data <= 0:
+        n_data = max(1, n // max(n_model, 1))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

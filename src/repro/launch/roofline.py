@@ -1,0 +1,221 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_operand_bytes_per_device / link_bw
+               (pod-axis collectives use the DCN bandwidth)
+
+``cost_analysis()`` on the SPMD-partitioned module is per-device, so these
+are the global formulas of the brief divided through by chip count.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and
+sum operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute ops (start/done fused variants included).
+MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (inference) comes from the
+cost model, giving the useful-compute ratio that catches remat waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e constants (per the brief)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+DCN_BW = 6.25e9              # cross-pod (pod axis), ~8x scarcer
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result-shape based parsing: optimized HLO prints operands as bare %refs,
+# so we read the RESULT shape right after '=' and convert per collective
+# kind (reduce-scatter result is the scattered piece -> x group size).
+_RESULT_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# replica_groups=[16,16]<=[256] (iota) or {{0,1,...},{...}} (explicit)
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,()TS]+)\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    pod_bytes: float = 0.0          # collectives whose groups span pods
+    schedule: List[str] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _group_info(line: str, pod_group_stride: Optional[int]
+                ) -> Tuple[int, bool]:
+    """-> (group_size, crosses_pod)."""
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        crosses = False
+        if pod_group_stride:
+            # iota grouping [G,S]<=[N] (with optional transpose): group 0 is
+            # ids 0..S-1 for plain iota; a transposed iota T(1,0) strides by
+            # n_groups — conservatively flag cross-pod when the group span
+            # exceeds the pod stride.
+            span = group_size if "T(" not in m.group(3) else \
+                n_groups * (group_size - 1) + 1
+            crosses = span > pod_group_stride
+        return group_size, crosses
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        crosses = bool(pod_group_stride) and \
+            len({i // pod_group_stride for i in ids}) > 1
+        return len(ids), crosses
+    return 1, False
+
+
+def parse_collectives(hlo_text: str,
+                      pod_group_stride: Optional[int] = None
+                      ) -> CollectiveStats:
+    """Sum per-device moved bytes of every collective op in optimized HLO.
+
+    Accounting per kind (ring algorithms, per participating device):
+      all-reduce        ~ 2x result bytes (reduce-scatter + all-gather)
+      all-gather        ~ result bytes (each device receives result-operand)
+      reduce-scatter    ~ result bytes x group (operand size)
+      all-to-all        ~ result bytes
+      collective-permute~ result bytes
+    """
+    st = CollectiveStats()
+    for m in _RESULT_RE.finditer(hlo_text):
+        shape_str, kind, startdone = m.group(1), m.group(2), m.group(3)
+        if startdone == "-done":
+            continue                     # avoid double counting start/done
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shape_str):
+            nbytes += _shape_bytes(sm.group(1), sm.group(2))
+        line_end = hlo_text.find("\n", m.start())
+        line = hlo_text[m.start():line_end if line_end > 0 else None]
+        gsize, crosses = _group_info(line, pod_group_stride)
+        if kind == "all-reduce":
+            nbytes *= 2
+        elif kind == "reduce-scatter":
+            nbytes *= max(gsize, 1)
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0.0) + nbytes
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+        if crosses:
+            st.pod_bytes += nbytes
+        if len(st.schedule) < 2000:
+            st.schedule.append(f"{kind}: {nbytes/1e6:.2f} MB"
+                               + (" [pod]" if crosses else ""))
+    return st
+
+
+@dataclass
+class Roofline:
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    pod_bytes_dev: float
+    n_chips: int
+    model_flops: float
+    collectives: Optional[CollectiveStats] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        ici = (self.coll_bytes_dev - self.pod_bytes_dev) / ICI_BW
+        return ici + self.pod_bytes_dev / DCN_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap model: step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops aggregated over chips)."""
+        total = self.flops_dev * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip-seconds roofline doing useful model math:
+        (MODEL_FLOPS / peak / chips) / step_time."""
+        ideal = self.model_flops / PEAK_FLOPS / self.n_chips
+        return ideal / self.step_s if self.step_s else 0.0
+
+    def to_dict(self) -> Dict:
+        d = {
+            "flops_dev": self.flops_dev, "bytes_dev": self.bytes_dev,
+            "coll_bytes_dev": self.coll_bytes_dev,
+            "pod_bytes_dev": self.pod_bytes_dev,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_s": self.step_s,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "n_chips": self.n_chips,
+        }
+        if self.collectives:
+            d["coll_bytes_by_kind"] = self.collectives.bytes_by_kind
+            d["coll_count_by_kind"] = self.collectives.count_by_kind
+        return d
+
+
+def build_roofline(compiled, model_flops: float, n_chips: int,
+                   pod_group_stride: Optional[int] = None,
+                   hlo_text: Optional[str] = None) -> Roofline:
+    """Loop-aware static profile (launch.hlo_analysis) is the primary
+    source; cost_analysis (which counts while bodies once) is kept in the
+    record for cross-checking."""
+    from repro.launch.hlo_analysis import profile as hlo_profile
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    prof = hlo_profile(text, pod_group_stride)
+    st = CollectiveStats(bytes_by_kind=dict(prof.coll_bytes),
+                         count_by_kind=dict(prof.coll_count),
+                         pod_bytes=prof.pod_bytes)
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        cost = ca[0] if isinstance(ca, (list, tuple)) else dict(ca)
+    except Exception:
+        pass
+    flops = prof.dot_flops or float(cost.get("flops", 0.0))
+    bytes_ = prof.traffic_bytes or float(cost.get("bytes accessed", 0.0))
+    return Roofline(flops_dev=flops, bytes_dev=bytes_,
+                    coll_bytes_dev=st.total_bytes,
+                    pod_bytes_dev=st.pod_bytes, n_chips=n_chips,
+                    model_flops=model_flops, collectives=st)

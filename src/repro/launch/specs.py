@@ -1,0 +1,142 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation.  The dry-run lowers
+against these; nothing here touches devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, TrainConfig
+from repro.models import build_model
+from repro.parallel.param_sharding import cache_shardings, param_shardings
+
+Struct = jax.ShapeDtypeStruct
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _bspec(mesh: Mesh, batch: int):
+    b = _batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in b])) if b else 1
+    if batch % n == 0 and batch > 1:
+        return b if len(b) > 1 else b[0]
+    # small batches: shard along 'data' only if divisible, else replicate
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0 \
+            and batch > 1:
+        return "data"
+    return None
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> Tuple[Dict[str, Struct], Dict[str, NamedSharding]]:
+    """Training/prefill batch structs + shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    bs = _bspec(mesh, b)
+    structs: Dict[str, Struct] = {}
+    shards: Dict[str, NamedSharding] = {}
+    s_text = s
+    if cfg.family == "vlm":
+        s_text = s - cfg.vision_tokens
+        structs["patch_embeds"] = Struct((b, cfg.vision_tokens, cfg.d_model),
+                                         jnp.bfloat16)
+        shards["patch_embeds"] = NamedSharding(mesh, P(bs, None, None))
+    if cfg.family == "audio":
+        structs["frames"] = Struct((b, cfg.enc_seq, cfg.d_model),
+                                   jnp.bfloat16)
+        shards["frames"] = NamedSharding(mesh, P(bs, None, None))
+    structs["tokens"] = Struct((b, s_text), jnp.int32)
+    shards["tokens"] = NamedSharding(mesh, P(bs, None))
+    if shape.kind == "train":
+        structs["labels"] = Struct((b, s_text), jnp.int32)
+        shards["labels"] = NamedSharding(mesh, P(bs, None))
+    return structs, shards
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, model
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Decode-step inputs: one new token + the KV/recurrent cache."""
+    b = shape.global_batch
+    bs = _bspec(mesh, b)
+    cache = jax.eval_shape(lambda: model.init_cache(b, shape.seq_len))
+    # sequence-shard the KV when heads can't cover the model axis or the
+    # context is very long (flash-decode layout)
+    seq_shard = (shape.seq_len >= 262144 or
+                 cfg.attention.n_kv_heads % mesh.shape["model"] != 0)
+    structs = {
+        "tokens": Struct((b, 1), jnp.int32),
+        "pos": Struct((b, 1), jnp.int32),
+        "cache": cache,
+    }
+    shards = {
+        "tokens": NamedSharding(mesh, P(bs, None)),
+        "pos": NamedSharding(mesh, P(bs, None)),
+        "cache": cache_shardings(mesh, cache, seq_shard=seq_shard),
+    }
+    return structs, shards
+
+
+def _model_shard(cfg: ArchConfig, mesh: Mesh, kind: str = "train") -> bool:
+    # sequence-parallel archs (heads don't divide the model axis) keep
+    # weights FSDP-only — but only where activations carry a long seq dim
+    # (train/prefill).  Decode keeps TP weights: with one query token the
+    # seq dim can't absorb the model axis, and per-step weight gathers
+    # would dominate the step.
+    if kind == "decode":
+        return True
+    return cfg.attention.n_heads % mesh.shape["model"] == 0 \
+        if cfg.attention.n_heads else True
+
+
+def state_specs(cfg: ArchConfig, tcfg: TrainConfig, mesh: Mesh, model
+                ) -> Tuple[Any, Any]:
+    """Train-state structs + shardings (params + AdamW moments)."""
+    from repro.runtime.train_loop import init_state
+    ms = _model_shard(cfg, mesh)
+    state = jax.eval_shape(
+        lambda: init_state(model, jax.random.PRNGKey(0), tcfg))
+    shards = {
+        "params": param_shardings(mesh, state["params"], model_shard=ms),
+        "opt": {
+            "m": param_shardings(mesh, state["opt"]["m"], model_shard=ms),
+            "v": param_shardings(mesh, state["opt"]["v"], model_shard=ms),
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+    if "err" in state:
+        shards["err"] = param_shardings(mesh, state["err"],
+                                        model_shard=ms)
+    return state, shards
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, model,
+                kind: str = "train") -> Tuple[Any, Any]:
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return params, param_shardings(
+        mesh, params, model_shard=_model_shard(cfg, mesh, kind))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, model,
+                tcfg: TrainConfig = None):
+    """Everything the dry-run needs for one (arch x shape) cell."""
+    tcfg = tcfg or TrainConfig()
+    if shape.kind == "train":
+        state, state_sh = state_specs(cfg, tcfg, mesh, model)
+        batch, batch_sh = batch_specs(cfg, shape, mesh)
+        return {"state": state, "batch": batch}, \
+               {"state": state_sh, "batch": batch_sh}
+    if shape.kind == "prefill":
+        params, params_sh = param_specs(cfg, mesh, model, "prefill")
+        batch, batch_sh = batch_specs(cfg, shape, mesh)
+        return {"params": params, "batch": batch}, \
+               {"params": params_sh, "batch": batch_sh}
+    # decode
+    params, params_sh = param_specs(cfg, mesh, model, "decode")
+    dec, dec_sh = decode_specs(cfg, shape, mesh, model)
+    return {"params": params, **dec}, {"params": params_sh, **dec_sh}

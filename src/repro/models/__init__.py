@@ -1,0 +1,21 @@
+"""Model zoo + factory."""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.configs.base import ArchConfig, CNNConfig
+
+
+def build_model(cfg: Union[ArchConfig, CNNConfig]):
+    """--arch config -> model instance (TransformerLM / WhisperLM / CNN)."""
+    if isinstance(cfg, CNNConfig):
+        from repro.models import cnn
+        return cnn
+    if cfg.family == "audio":
+        from repro.models.whisper import WhisperLM
+        return WhisperLM(cfg)
+    from repro.models.transformer import TransformerLM
+    return TransformerLM(cfg)
+
+
+__all__ = ["build_model"]

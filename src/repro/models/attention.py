@@ -1,0 +1,217 @@
+"""Attention: GQA with causal / sliding-window masks, logit softcap,
+rotary embeddings, KV caches (flat + rolling window), and a
+query-chunked streaming-softmax path that bounds the score-matrix
+footprint at long context (the pure-JAX analogue of the Pallas flash
+kernel; the kernel itself lives in repro.kernels.flash_attention and is
+swapped in by ``use_kernels=True`` on real TPUs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, softcap
+from repro.parallel.sharding import logical_spec, sc
+
+
+def _seq_sharded_attn() -> bool:
+    """True when the active rules run attention context-parallel (q rows
+    sharded on "model") — the layout used when heads don't divide the
+    model axis.  In that mode the q-chunk scan is skipped (chunking would
+    scan over a sharded dim); the row sharding itself bounds memory."""
+    spec = logical_spec("attn_q_chunk")
+    return spec is not None and len(spec) > 1 and spec[1] == "model"
+
+Params = Dict[str, Any]
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, n_heads * head_dim).reshape(
+            d, n_heads, head_dim),
+        "wk": dense_init(ks[1], d, n_kv * head_dim).reshape(d, n_kv, head_dim),
+        "wv": dense_init(ks[2], d, n_kv * head_dim).reshape(d, n_kv, head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d).reshape(
+            n_heads, head_dim, d),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+    return p
+
+
+def _qkv(p: Params, x: jnp.ndarray, pos: jnp.ndarray, theta: float,
+         mrope: Tuple[int, ...]) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if theta:
+        q = apply_rope(q, pos, theta, mrope)
+        k = apply_rope(k, pos, theta, mrope)
+    return sc(q, "act_bthd"), k, v
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B,S,KV,D] -> [B,S,H,D] by repeating each kv head H/KV times."""
+    b, s, kv, d = k.shape
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def _group_q(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """[B,S,H,D] -> [B,S,KV,G,D] grouped query heads (no KV copy)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+          window: int, cap: float, scale: float) -> jnp.ndarray:
+    """Masked grouped-query SDPA.
+
+    q [B,Sq,KV,G,D]; k/v [B,Sk,KV,D] (NOT expanded — the grouped einsum
+    avoids materializing an H-headed KV copy); q_pos [B,Sq], k_pos [B,Sk].
+    Scores accumulate in fp32 via preferred_element_type (native mixed
+    dot on TPU; avoids bf16->f32 operand-convert copies).  The mask is
+    computed inline so XLA fuses it with the score producer.
+    Returns [B,Sq,H,D].
+    """
+    b, sq, n_kv, g, d = q.shape
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    ok = jnp.ones((b, 1, 1, sq, k_pos.shape[1]), bool)
+    if causal:
+        ok &= (q_pos[:, None, None, :, None] >= k_pos[:, None, None,
+                                                      None, :])
+    if window:
+        ok &= (q_pos[:, None, None, :, None] -
+               k_pos[:, None, None, None, :] < window)
+    s = jnp.where(ok, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, sq, n_kv * g, d)
+
+
+def attention(p: Params, x: jnp.ndarray, pos: jnp.ndarray, *,
+              n_heads: int, causal: bool = True, window: int = 0,
+              cap: float = 0.0, theta: float = 10000.0,
+              mrope: Tuple[int, ...] = (), q_chunk: int = 512,
+              kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              kv_pos: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).
+
+    ``kv``: optional external K/V (cross-attention) already rotated.
+    Query-chunked when S_q > q_chunk, with per-chunk rematerialization:
+    the backward pass recomputes each chunk's scores instead of saving the
+    O(S^2) score tensor — the pure-JAX flash-attention memory profile.
+    """
+    b, s_q, _ = x.shape
+    q, k, v = _qkv(p, x, pos, theta, mrope)
+    if kv is not None:
+        k, v = kv
+    head_dim = q.shape[-1]
+    n_kv = k.shape[2]
+    scale = 1.0 / math.sqrt(head_dim)
+    q_pos = pos[..., 0] if pos.ndim == 3 else pos          # [B, S]
+    k_pos = q_pos if kv_pos is None else kv_pos
+    n_chunks = max(1, s_q // q_chunk)
+    if s_q % q_chunk or n_chunks <= 1 or _seq_sharded_attn():
+        out = _sdpa(_group_q(q, n_kv), k, v, q_pos, k_pos, causal, window,
+                    cap, scale)
+    else:
+        # scan over query chunks: compact HLO, bounded score memory
+        qs = q.reshape(b, n_chunks, q_chunk, n_heads, head_dim)
+        qp = q_pos.reshape(b, n_chunks, q_chunk)
+
+        @jax.checkpoint
+        def chunk_fn(qc, qpc):
+            qc = sc(qc, "attn_q_chunk")
+            o = _sdpa(_group_q(qc, n_kv), k, v, qpc, k_pos, causal,
+                      window, cap, scale)
+            return sc(o, "attn_q_chunk")
+
+        def chunk(carry, inp):
+            qc, qpc = inp                                  # [B,C,H,D],[B,C]
+            return carry, chunk_fn(qc, qpc)
+
+        _, outs = jax.lax.scan(chunk, None,
+                               (jnp.moveaxis(qs, 1, 0),
+                                jnp.moveaxis(qp, 1, 0)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s_q, n_heads, head_dim)
+    out = sc(out, "act_bthd")
+    return jnp.einsum("bqhd,hdk->bqk", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, max_seq: int, n_kv: int, head_dim: int,
+               window: int, dtype) -> Dict[str, jnp.ndarray]:
+    """Flat cache, or rolling-buffer cache when window < max_seq."""
+    size = min(window, max_seq) if window else max_seq
+    return {
+        "k": jnp.zeros((batch, size, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, size, n_kv, head_dim), dtype),
+    }
+
+
+def decode_attention(p: Params, x: jnp.ndarray, pos: jnp.ndarray,
+                     cache: Dict[str, jnp.ndarray], *,
+                     n_heads: int, window: int = 0, cap: float = 0.0,
+                     theta: float = 10000.0, mrope: Tuple[int, ...] = ()
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step. x: [B, 1, d]; pos: [B, 1] current position.
+
+    Flat cache: write at ``pos``; rolling cache: write at ``pos % window``
+    with validity mask reconstructed from slot arithmetic.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, pos, theta, mrope)
+    size = cache["k"].shape[1]
+    p_now = pos[..., 0] if pos.ndim == 3 else pos           # [B, 1]
+    # mask-based write: elementwise select shards cleanly along a sharded
+    # KV-sequence dim (a batched dynamic_update_slice lowers to scatter,
+    # which GSPMD cannot partition along the updated dim).
+    slots_w = jnp.arange(size, dtype=jnp.int32)[None, :]    # [1, size]
+    wmask = (slots_w == (p_now[:, :1] % size))[..., None, None]
+
+    k_cache = sc(jnp.where(wmask, k_new.astype(cache["k"].dtype),
+                           cache["k"]), "kv_bskd")
+    v_cache = sc(jnp.where(wmask, v_new.astype(cache["v"].dtype),
+                           cache["v"]), "kv_bskd")
+    n_kv = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    slots = jnp.arange(size)[None, :]                       # [1, size]
+    cur = p_now[:, :1]                                      # [B, 1]
+    if window:
+        # slot s holds position cur - ((cur - s) mod size); valid if >= 0
+        slot_pos = cur - ((cur - slots) % size)
+        valid = slot_pos >= 0
+    else:
+        valid = slots <= cur
+    bias = jnp.where(valid, 0.0, -jnp.inf)                  # [B, size]
+    qg = _group_q(q, n_kv)                                  # [B,1,KV,G,D]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap) + bias[:, None, None, None, :]
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v_cache)
+    out = out.reshape(q.shape)
+    y = jnp.einsum("bqhd,hdk->bqk", out, p["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,255 @@
+"""Residual block kinds + dispatch table.
+
+One entry per placeable unit kind (mirrors repro.core.cost_model's
+``_block_kinds`` — the SAME kind strings drive the cost model and the
+model definition, so the LLHR planner's view and the executed graph agree).
+
+apply(params, x, state, ctx) -> (x, new_state, aux)
+  ctx: {"cfg", "mode": train|prefill|decode, "pos": [B,S]([B,S,3] M-RoPE)}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import recurrent as rec_mod
+from repro.models.layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from repro.models.moe import moe_apply, moe_init
+from repro.parallel.sharding import sc
+
+Params = Dict[str, Any]
+
+
+class Ctx(NamedTuple):
+    cfg: ArchConfig
+    mode: str                   # 'train' | 'prefill' | 'decode'
+    pos: jnp.ndarray            # [B, S] or [B, S, 3]
+    cache_len: int = 0          # decode cache size (flat)
+
+
+def _norms_init(cfg: ArchConfig, post: bool) -> Params:
+    p = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model)}
+    if post:
+        p["ln1p"] = rmsnorm_init(cfg.d_model)
+        p["ln2p"] = rmsnorm_init(cfg.d_model)
+    return p
+
+
+def _post(p: Params, name: str, x: jnp.ndarray, cfg: ArchConfig):
+    return rmsnorm(p[name], x, cfg.norm_eps) if name in p else x
+
+
+# ---------------------------------------------------------------------------
+# Attention blocks (full / local)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_init(key, cfg: ArchConfig) -> Params:
+    a = cfg.attention
+    ks = jax.random.split(key, 2)
+    p = _norms_init(cfg, post=cfg.attention.logit_softcap > 0)  # gemma2 style
+    p["attn"] = attn_mod.attn_init(ks[0], cfg.d_model, a.n_heads,
+                                   a.n_kv_heads, cfg.head_dim, a.qkv_bias)
+    if cfg.moe.enabled:
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe.n_experts,
+                            cfg.moe.d_expert, cfg.glu)
+    elif cfg.d_ff:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.glu)
+    return p
+
+
+def _attn_window(cfg: ArchConfig, local: bool) -> int:
+    return cfg.attention.window if local else 0
+
+
+def _attn_block_apply(local: bool):
+    def apply(p: Params, x: jnp.ndarray, state, ctx: Ctx):
+        cfg = ctx.cfg
+        a = cfg.attention
+        win = _attn_window(cfg, local)
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if ctx.mode == "decode":
+            y, new_state = attn_mod.decode_attention(
+                p["attn"], h, ctx.pos, state, n_heads=a.n_heads, window=win,
+                cap=a.logit_softcap, theta=a.rope_theta,
+                mrope=a.mrope_sections)
+        else:
+            y = attn_mod.attention(
+                p["attn"], h, ctx.pos, n_heads=a.n_heads, causal=True,
+                window=win, cap=a.logit_softcap, theta=a.rope_theta,
+                mrope=a.mrope_sections)
+            new_state = _prefill_cache(p, h, ctx, win) \
+                if ctx.mode == "prefill" else state
+        x = x + _post(p, "ln1p", y, cfg)
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe.enabled:
+            from repro.parallel.sharding import current_mesh
+            mesh = current_mesh()
+            if mesh is not None and "model" in mesh.axis_names and \
+                    cfg.moe.n_experts % mesh.shape["model"] == 0:
+                from repro.models.moe import moe_apply_expert_parallel
+                y2, aux = moe_apply_expert_parallel(
+                    p["moe"], h2, top_k=cfg.moe.top_k, act=cfg.act,
+                    glu=cfg.glu, mesh=mesh,
+                    capacity_factor=cfg.moe.capacity_factor)
+            else:
+                y2, aux = moe_apply(p["moe"], h2, top_k=cfg.moe.top_k,
+                                    act=cfg.act, glu=cfg.glu,
+                                    capacity_factor=cfg.moe.capacity_factor)
+        elif cfg.d_ff:
+            y2 = mlp(p["mlp"], h2, cfg.act, cfg.glu)
+        else:
+            y2 = jnp.zeros_like(x)
+        x = sc(x + _post(p, "ln2p", y2, cfg), "act_btd")
+        return x, new_state, aux
+    return apply
+
+
+def _prefill_cache(p: Params, h: jnp.ndarray, ctx: Ctx, win: int):
+    """Recompute rotated K/V and lay them out as a decode-ready cache."""
+    cfg = ctx.cfg
+    a = cfg.attention
+    _, k, v = attn_mod._qkv(p["attn"], h, ctx.pos, a.rope_theta,
+                            a.mrope_sections)
+    s = k.shape[1]
+    size = min(win, ctx.cache_len) if win else ctx.cache_len
+    if win and s >= size:
+        k = jnp.roll(k[:, -size:], s % size, axis=1)
+        v = jnp.roll(v[:, -size:], s % size, axis=1)
+    else:
+        pad = size - s
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        elif pad < 0:
+            k, v = k[:, :size], v[:, :size]
+    return {"k": sc(k, "kv_bskd"), "v": sc(v, "kv_bskd")}
+
+
+def _attn_state_init(local: bool):
+    def init(cfg: ArchConfig, batch: int, dtype, cache_len: int):
+        win = _attn_window(cfg, local)
+        return attn_mod.init_cache(batch, cache_len, cfg.attention.n_kv_heads,
+                                   cfg.head_dim, win, dtype)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (griffin)
+# ---------------------------------------------------------------------------
+
+
+def _rglru_block_init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p = _norms_init(cfg, post=False)
+    p["rglru"] = rec_mod.rglru_init(ks[0], cfg.d_model,
+                                    cfg.rglru_width or cfg.d_model,
+                                    cfg.rglru_conv_size)
+    if cfg.d_ff:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.glu)
+    return p
+
+
+def _rglru_block_apply(p: Params, x: jnp.ndarray, state, ctx: Ctx):
+    cfg = ctx.cfg
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if state is None or "h" not in state:
+        state = rec_mod.rglru_block_state(
+            x.shape[0], cfg.rglru_width or cfg.d_model, cfg.rglru_conv_size,
+            x.dtype, decode=False)
+    state = dict(state, decode=(ctx.mode == "decode"))
+    y, new_state = rec_mod.rglru_block_apply(p["rglru"], h, state)
+    new_state = {k: v for k, v in new_state.items() if k != "decode"}
+    x = x + y
+    if cfg.d_ff:
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                    cfg.act, cfg.glu)
+    return sc(x, "act_btd"), new_state, jnp.zeros((), jnp.float32)
+
+
+def _rglru_state_init(cfg: ArchConfig, batch: int, dtype, cache_len: int):
+    st = rec_mod.rglru_block_state(batch, cfg.rglru_width or cfg.d_model,
+                                   cfg.rglru_conv_size, dtype, decode=True)
+    return {k: v for k, v in st.items() if k != "decode"}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+
+def _xlstm_block_init(flavor: str):
+    def init(key, cfg: ArchConfig) -> Params:
+        ks = jax.random.split(key, 2)
+        p = _norms_init(cfg, post=False)
+        a = cfg.attention
+        cell_init = rec_mod.mlstm_init if flavor == "mlstm" \
+            else rec_mod.slstm_init
+        p["cell"] = cell_init(ks[0], cfg.d_model, a.n_heads, cfg.head_dim)
+        if cfg.d_ff:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.glu)
+        return p
+    return init
+
+
+def _xlstm_block_apply(flavor: str):
+    def apply(p: Params, x: jnp.ndarray, state, ctx: Ctx):
+        cfg = ctx.cfg
+        a = cfg.attention
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if state is None:
+            if flavor == "mlstm":
+                state = rec_mod.mlstm_state(x.shape[0], a.n_heads,
+                                            cfg.head_dim)
+            else:
+                state = rec_mod.slstm_state(x.shape[0], a.n_heads,
+                                            cfg.head_dim, x.dtype)
+        cell = rec_mod.mlstm_seq if flavor == "mlstm" else rec_mod.slstm_seq
+        y, new_state = cell(p["cell"], h, state)
+        x = x + y
+        if cfg.d_ff:
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                        cfg.act, cfg.glu)
+        return sc(x, "act_btd"), new_state, jnp.zeros((), jnp.float32)
+    return apply
+
+
+def _xlstm_state_init(flavor: str):
+    def init(cfg: ArchConfig, batch: int, dtype, cache_len: int):
+        a = cfg.attention
+        if flavor == "mlstm":
+            return rec_mod.mlstm_state(batch, a.n_heads, cfg.head_dim)
+        return rec_mod.slstm_state(batch, a.n_heads, cfg.head_dim, dtype)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Dispatch table — kinds match repro.core.cost_model._block_kinds
+# ---------------------------------------------------------------------------
+
+
+class BlockDef(NamedTuple):
+    init: Any
+    apply: Any
+    state_init: Any
+
+
+BLOCK_KINDS: Dict[str, BlockDef] = {
+    "attn_full": BlockDef(_attn_block_init, _attn_block_apply(False),
+                          _attn_state_init(False)),
+    "attn_local": BlockDef(_attn_block_init, _attn_block_apply(True),
+                           _attn_state_init(True)),
+    "rglru": BlockDef(_rglru_block_init, _rglru_block_apply,
+                      _rglru_state_init),
+    "slstm": BlockDef(_xlstm_block_init("slstm"),
+                      _xlstm_block_apply("slstm"),
+                      _xlstm_state_init("slstm")),
+    "mlstm": BlockDef(_xlstm_block_init("mlstm"),
+                      _xlstm_block_apply("mlstm"),
+                      _xlstm_state_init("mlstm")),
+}

@@ -1,0 +1,110 @@
+"""The paper's own CNNs (LeNet, AlexNet) in JAX, built directly from the
+same ``CNNConfig`` layer specs the cost model reads — so the simulator's
+placement units correspond 1:1 to executable layers.
+
+``apply_layers`` executes an arbitrary contiguous slice, which is what the
+distributed-inference runtime uses: each UAV/device runs its assigned slice
+and hands the activation to the next (the partition-invariance test asserts
+sliced execution == monolithic execution exactly).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig, ConvLayerSpec
+
+Params = Dict[str, Any]
+
+
+def _conv_out(s: int, k: int, stride: int, pad: int) -> int:
+    return (s + 2 * pad - k) // stride + 1
+
+
+def init_cnn(key, cfg: CNNConfig) -> List[Params]:
+    """One params dict per layer spec (pools get empty dicts)."""
+    params: List[Params] = []
+    spatial, channels = cfg.input_hw, cfg.input_channels
+    flat: Optional[int] = None
+    keys = jax.random.split(key, len(cfg.layers))
+    for spec, k in zip(cfg.layers, keys):
+        if spec.kind == "conv":
+            n_in = spec.in_channels or channels
+            fan_in = n_in * spec.kernel ** 2
+            w = jax.random.truncated_normal(
+                k, -2, 2, (spec.kernel, spec.kernel, n_in,
+                           spec.out_channels)) / math.sqrt(fan_in)
+            params.append({"w": w, "b": jnp.zeros((spec.out_channels,))})
+            spatial = _conv_out(spatial, spec.kernel, spec.stride,
+                                spec.padding)
+            channels = spec.out_channels
+        elif spec.kind == "pool":
+            params.append({})
+            spatial = _conv_out(spatial, spec.kernel, spec.stride,
+                                spec.padding)
+        else:
+            n_in = spec.in_features or (flat if flat is not None
+                                        else channels * spatial ** 2)
+            w = jax.random.truncated_normal(
+                k, -2, 2, (n_in, spec.out_features)) / math.sqrt(n_in)
+            params.append({"w": w, "b": jnp.zeros((spec.out_features,))})
+            flat = spec.out_features
+    return params
+
+
+def apply_layer(spec: ConvLayerSpec, p: Params, x: jnp.ndarray,
+                last_fc: bool) -> jnp.ndarray:
+    """x: NHWC for conv/pool, [B, F] for fc (auto-flattened)."""
+    if spec.kind == "conv":
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(spec.stride, spec.stride),
+            padding=[(spec.padding, spec.padding)] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(y + p["b"])
+    if spec.kind == "pool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            window_dimensions=(1, spec.kernel, spec.kernel, 1),
+            window_strides=(1, spec.stride, spec.stride, 1),
+            padding="VALID")
+    if x.ndim > 2:
+        x = x.reshape(x.shape[0], -1)
+    y = x @ p["w"] + p["b"]
+    return y if last_fc else jax.nn.relu(y)
+
+
+def apply_layers(cfg: CNNConfig, params: Sequence[Params], x: jnp.ndarray,
+                 start: int = 0, stop: Optional[int] = None) -> jnp.ndarray:
+    """Execute layers [start, stop) — a placement slice."""
+    stop = len(cfg.layers) if stop is None else stop
+    last_fc_idx = max(i for i, s in enumerate(cfg.layers) if s.kind == "fc")
+    for i in range(start, stop):
+        x = apply_layer(cfg.layers[i], params[i], x, last_fc=i == last_fc_idx)
+    return x
+
+
+def forward(cfg: CNNConfig, params: Sequence[Params],
+            x: jnp.ndarray) -> jnp.ndarray:
+    return apply_layers(cfg, params, x)
+
+
+def distributed_forward(cfg: CNNConfig, params: Sequence[Params],
+                        x: jnp.ndarray,
+                        assign: Sequence[int]) -> Tuple[jnp.ndarray, int]:
+    """Execute the model as the LLHR placement would: one contiguous run
+    per device change, counting hand-offs.  Numerically identical to
+    ``forward`` by construction (the invariance test asserts it)."""
+    transfers = 0
+    i = 0
+    while i < len(cfg.layers):
+        j = i
+        while j < len(cfg.layers) and assign[j] == assign[i]:
+            j += 1
+        x = apply_layers(cfg, params, x, i, j)
+        if j < len(cfg.layers):
+            transfers += 1
+        i = j
+    return x, transfers

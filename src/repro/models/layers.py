@@ -1,0 +1,151 @@
+"""Shared model building blocks (pure JAX, functional, pytree params)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import sc
+
+Params = Dict[str, Any]
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                       dtype) * jnp.asarray(scale, dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return truncated_normal(key, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) parameterization: zeros init == identity
+    return (x * (1.0 + p["scale"])).astype(dt)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain)
+# ---------------------------------------------------------------------------
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def mlp_init(key, d: int, d_ff: int, glu: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, d_ff),
+         "w_out": dense_init(ks[1], d_ff, d)}
+    if glu:
+        p["w_gate"] = dense_init(ks[2], d, d_ff)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str, glu: bool) -> jnp.ndarray:
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(dt))
+    if glu:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt))
+        h = _ACT[act](g) * h
+    else:
+        h = _ACT[act](h)
+    h = sc(h, "act_btf")
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float,
+               mrope_sections: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """x: [B, S, H, D]; pos: [B, S] (or [B, S, 3] for M-RoPE)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    if mrope_sections and pos.ndim == 3:
+        # qwen2-vl M-RoPE: frequency bands split across (t, h, w) positions
+        secs = jnp.cumsum(jnp.asarray((0,) + tuple(mrope_sections)))
+        band = jnp.searchsorted(secs[1:], jnp.arange(d // 2), side="right")
+        band = jnp.clip(band, 0, pos.shape[-1] - 1)    # [D/2] -> section id
+        angles = pos[..., band].astype(jnp.float32) * freqs  # [B,S,D/2]
+    else:
+        if pos.ndim == 3:
+            pos = pos[..., 0]
+        angles = pos[..., None].astype(jnp.float32) * freqs  # [B,S,D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int) -> Params:
+    return {"table": truncated_normal(key, (vocab, d), 1.0)}
+
+
+def embed_lookup(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return sc(jnp.take(p["table"].astype(dtype), tokens, axis=0), "act_btd")
+
+
+def lm_head(table_or_w: jnp.ndarray, x: jnp.ndarray,
+            final_cap: float = 0.0) -> jnp.ndarray:
+    logits = jnp.einsum("...d,vd->...v", x, table_or_w.astype(x.dtype))
+    logits = softcap(logits, final_cap)
+    return sc(logits, "act_btv")
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean CE in fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

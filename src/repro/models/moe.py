@@ -1,0 +1,184 @@
+"""Mixture-of-Experts MLP (granite-moe, olmoe): top-k routing with
+capacity-based dispatch.
+
+TPU-native formulation: instead of ragged per-expert token lists (the GPU
+Megablocks route), tokens are scattered into a dense, statically-shaped
+buffer [groups, experts, capacity, d] (GShard-style) so the expert GEMM is
+a single MXU-aligned einsum.  Groups = sequences, so the position-in-expert
+cumsum stays per-group ([S*k, E] ints) and never crosses the batch sharding.
+Expert weights and the dispatch buffer shard on the "model" axis (expert
+parallelism); GSPMD materializes the token all-to-all at the scatter.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _ACT, dense_init
+from repro.parallel.sharding import sc
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, d: int, n_experts: int, d_expert: int, glu: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(d_expert)
+    p = {
+        "router": dense_init(ks[0], d, n_experts),
+        "w_in": jax.random.truncated_normal(
+            ks[1], -2, 2, (n_experts, d, d_expert)) * scale_in,
+        "w_out": jax.random.truncated_normal(
+            ks[2], -2, 2, (n_experts, d_expert, d)) * scale_out,
+    }
+    if glu:
+        p["w_gate"] = jax.random.truncated_normal(
+            ks[3], -2, 2, (n_experts, d, d_expert)) * scale_in
+    return p
+
+
+def moe_apply(p: Params, x: jnp.ndarray, *, top_k: int, act: str,
+              glu: bool, capacity_factor: float = 1.25
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (y, aux_loss).  Groups = batch dim."""
+    dt = x.dtype
+    b, s, d = x.shape
+    e = p["w_in"].shape[0]
+    t = s * top_k
+    cap = max(1, int(math.ceil(s * top_k * capacity_factor / e)))
+
+    # --- routing ---------------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)            # [B,S,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                              # [E]
+    ce = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32),
+                  axis=(0, 1, 2))                                  # [E]
+    aux = e * jnp.sum(me * ce)
+
+    # --- dispatch positions (per group) -----------------------------------
+    idx_flat = idx.reshape(b, t)                        # [B, S*k]
+    onehot = jax.nn.one_hot(idx_flat, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - 1                # position in expert
+    pos = jnp.take_along_axis(pos, idx_flat[..., None], axis=-1)[..., 0]
+    keep = pos < cap                                    # capacity-dropped?
+
+    # --- scatter into [B, E, C, d] ----------------------------------------
+    x_rep = jnp.repeat(x, top_k, axis=1)                # [B, S*k, d]
+    flat_slot = idx_flat * cap + jnp.minimum(pos, cap - 1)
+    buf = jnp.zeros((b, e * cap, d), dt)
+    buf = jax.vmap(lambda bb, sl, xx, kk:
+                   bb.at[sl].add(xx * kk[:, None].astype(dt))
+                   )(buf, flat_slot, x_rep, keep)
+    buf = sc(buf.reshape(b, e, cap, d), "moe_ecd")
+
+    # --- expert GEMMs ------------------------------------------------------
+    h = jnp.einsum("becd,edf->becf", buf, p["w_in"].astype(dt))
+    if glu:
+        g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dt))
+        h = _ACT[act](g) * h
+    else:
+        h = _ACT[act](h)
+    y_buf = jnp.einsum("becf,efd->becd", h, p["w_out"].astype(dt))
+    y_buf = sc(y_buf, "moe_ecd").reshape(b, e * cap, d)
+
+    # --- combine -----------------------------------------------------------
+    y_tok = jax.vmap(lambda yy, sl: jnp.take(yy, sl, axis=0)
+                     )(y_buf, flat_slot)                # [B, S*k, d]
+    w = (gate.reshape(b, t) * keep.astype(jnp.float32)).astype(dt)
+    y = (y_tok * w[..., None]).reshape(b, s, top_k, d).sum(axis=2)
+    return sc(y, "act_btd"), aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert-parallel path
+# ---------------------------------------------------------------------------
+#
+# Under GSPMD the scatter/gather dispatch above partitions catastrophically
+# (§Perf: full-batch fp32 all-gathers of the dispatch buffer + an fp32
+# all-reduce of [B, S*k, d] per layer per microbatch — 790 GB/step on
+# olmoe).  The shard_map path exploits the layout fact that activations are
+# model-REPLICATED outside attention/MLP: every expert shard already holds
+# all of its data shard's tokens, so each shard routes locally to its own
+# E/|model| experts and ONE bf16 psum of [B_loc, S, d] combines the
+# results — the same collective shape as a standard TP MLP.
+
+
+def moe_apply_expert_parallel(p: Params, x: jnp.ndarray, *, top_k: int,
+                              act: str, glu: bool, mesh,
+                              capacity_factor: float = 1.25
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, d] (sharded on batch axes, replicated on "model")."""
+    from jax.sharding import PartitionSpec as P
+
+    dt = x.dtype
+    e = p["w_in"].shape[0]
+    model_n = mesh.shape["model"]
+    e_loc = e // model_n
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bb = batch_axes if len(batch_axes) > 1 else \
+        (batch_axes[0] if batch_axes else None)
+    all_axes = tuple(mesh.axis_names)
+
+    def local_fn(router, w_in, w_gate, w_out, xs):
+        b, s, d = xs.shape
+        t = b * s
+        xt = xs.reshape(t, d)
+        logits = jnp.einsum("td,de->te", xt, router.astype(dt))
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate, idx = jax.lax.top_k(probs, top_k)          # [T, k]
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+        # aux load-balance loss over the full expert set (router is
+        # replicated so every shard computes the same local value)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32),
+                      axis=(0, 1))
+        aux = e * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, all_axes)
+        # my experts: [lo, lo + e_loc)
+        lo = jax.lax.axis_index("model") * e_loc
+        idx_f = idx.reshape(t * top_k)
+        gate_f = gate.reshape(t * top_k)
+        mine = (idx_f >= lo) & (idx_f < lo + e_loc)
+        loc_e = jnp.where(mine, idx_f - lo, e_loc)       # e_loc = trash row
+        onehot = jax.nn.one_hot(loc_e, e_loc + 1, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        pos = jnp.take_along_axis(pos, loc_e[:, None], axis=1)[:, 0]
+        cap = max(1, int(math.ceil(t * top_k * capacity_factor / e)))
+        keep = mine & (pos < cap)
+        slot = jnp.where(keep, loc_e * cap + jnp.minimum(pos, cap - 1),
+                         e_loc * cap)                    # trash slot
+        x_rep = jnp.repeat(xt, top_k, axis=0)            # [T*k, d]
+        buf = jnp.zeros((e_loc * cap + 1, d), dt)
+        buf = buf.at[slot].add(x_rep * keep[:, None].astype(dt))
+        bufe = buf[:e_loc * cap].reshape(e_loc, cap, d)
+        h = jnp.einsum("ecd,edf->ecf", bufe, w_in.astype(dt))
+        if glu:
+            g = jnp.einsum("ecd,edf->ecf", bufe, w_gate.astype(dt))
+            h = _ACT[act](g) * h
+        else:
+            h = _ACT[act](h)
+        y_buf = jnp.einsum("ecf,efd->ecd", h, w_out.astype(dt))
+        y_tok = jnp.take(y_buf.reshape(e_loc * cap, d),
+                         jnp.minimum(slot, e_loc * cap - 1), axis=0)
+        w = (gate_f * keep.astype(jnp.float32)).astype(dt)
+        y = (y_tok * w[:, None]).reshape(t, top_k, d).sum(axis=1)
+        y = jax.lax.psum(y, "model")
+        return y.reshape(b, s, d), aux
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(None, None), P("model", None, None),
+                  P("model", None, None) if glu else P(None),
+                  P("model", None, None), P(bb, None, None)),
+        out_specs=(P(bb, None, None), P()),
+        check_vma=False)
+    w_gate = p.get("w_gate", jnp.zeros((1,), dt))
+    y, aux = fn(p["router"], p["w_in"], w_gate, p["w_out"], x)
+    return sc(y, "act_btd"), aux

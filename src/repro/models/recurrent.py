@@ -1,0 +1,358 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and xLSTM cells.
+
+Training uses ``jax.lax.associative_scan`` for the RG-LRU (log-depth linear
+recurrence — the TPU-native formulation) and ``jax.lax.scan`` for the
+(inherently sequential) sLSTM; the mLSTM uses a chunkwise-parallel form.
+Decode carries O(1) state per layer: this is what makes long_500k feasible
+for these families (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, truncated_normal
+from repro.parallel.sharding import sc
+
+Params = Dict[str, Any]
+
+_RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Real-Gated Linear Recurrent Unit) — Griffin eq. (1)-(4)
+# ---------------------------------------------------------------------------
+
+
+def rglru_init(key, d: int, width: int, conv_size: int) -> Params:
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = exp(-c*softplus(L)) lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (width,), minval=0.9, maxval=0.999)
+    log_a = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C))   # softplus^-1
+    return {
+        "w_x": dense_init(ks[1], d, width),              # input branch
+        "w_gate": dense_init(ks[2], d, width),           # gelu gate branch
+        "w_out": dense_init(ks[3], width, d),
+        "conv_w": truncated_normal(ks[4], (conv_size, width),
+                                   1.0 / math.sqrt(conv_size)),
+        "w_a": dense_init(ks[5], width, width),          # recurrence gate
+        "w_i": dense_init(ks[6], width, width),          # input gate
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "b_i": jnp.zeros((width,), jnp.float32),
+        "log_lambda": log_a,
+    }
+
+
+def _rglru_gates(p: Params, x: jnp.ndarray):
+    """x: [..., w] post-conv activations -> (a, gated_input)."""
+    dt = x.dtype
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, p["w_a"].astype(dt))
+                       + p["b_a"].astype(dt))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, p["w_i"].astype(dt))
+                       + p["b_i"].astype(dt))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["log_lambda"]).astype(jnp.float32) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a.astype(dt), (beta.astype(dt) * i * x)
+
+
+def rglru_seq(p: Params, x: jnp.ndarray, h0: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence RG-LRU via associative scan.  x: [B, S, w]."""
+    a, b = _rglru_gates(p, x)
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    # fold initial state into the first step: h1 = a1*h0 + b1
+    b32 = b32.at[:, 0].add(a32[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    A, H = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return H.astype(x.dtype), H[:, -1].astype(x.dtype)
+
+
+def rglru_step(p: Params, x: jnp.ndarray, h: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step.  x: [B, w], h: [B, w]."""
+    a, b = _rglru_gates(p, x)
+    h_new = a * h + b
+    return h_new, h_new
+
+
+def causal_conv1d(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  w: [K, width], x: [B, S, width]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return out
+
+
+def causal_conv1d_step(w: jnp.ndarray, x: jnp.ndarray, buf: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode-time conv.  x: [B, width]; buf: [B, K-1, width] (history)."""
+    k = w.shape[0]
+    hist = jnp.concatenate([buf, x[:, None]], axis=1)      # [B, K, w]
+    out = jnp.einsum("bkw,kw->bw", hist, w.astype(x.dtype))
+    return out, hist[:, 1:]
+
+
+def rglru_block_apply(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Griffin recurrent block: gate branch * RG-LRU branch -> out proj.
+
+    x: [B, S, d] (S may be 1 with ``state`` carrying decode state).
+    """
+    dt = x.dtype
+    decode = state.get("decode", False)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt))
+    if decode:
+        conv_out, conv_buf = causal_conv1d_step(p["conv_w"], u[:, 0],
+                                                state["conv"])
+        h_new, y = rglru_step(p, conv_out, state["h"])
+        y = y[:, None]
+        new_state = {"h": sc(h_new, "state_bw"), "conv": conv_buf,
+                     "decode": True}
+    else:
+        conv_out = causal_conv1d(p["conv_w"], u)
+        y, h_last = rglru_seq(p, conv_out, state["h"])
+        k = p["conv_w"].shape[0]
+        conv_buf = u[:, -(k - 1):]          # history for subsequent decode
+        new_state = {"h": sc(h_last, "state_bw"), "conv": conv_buf,
+                     "decode": False}
+    out = jnp.einsum("bsw,wd->bsd", gate * y, p["w_out"].astype(dt))
+    return out, new_state
+
+
+def rglru_block_state(batch: int, width: int, conv_size: int, dtype,
+                      decode: bool) -> Dict[str, jnp.ndarray]:
+    return {"h": jnp.zeros((batch, width), dtype),
+            "conv": jnp.zeros((batch, conv_size - 1, width), dtype),
+            "decode": decode}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — mLSTM (matrix memory, chunk-parallelizable) and sLSTM (scalar)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d: int, n_heads: int, head_dim: int) -> Params:
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, n_heads * head_dim).reshape(d, n_heads,
+                                                               head_dim),
+        "wk": dense_init(ks[1], d, n_heads * head_dim).reshape(d, n_heads,
+                                                               head_dim),
+        "wv": dense_init(ks[2], d, n_heads * head_dim).reshape(d, n_heads,
+                                                               head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d).reshape(
+            n_heads, head_dim, d),
+        "w_if": dense_init(ks[4], d, 2 * n_heads),   # input+forget pre-acts
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)),
+                                 jnp.ones((n_heads,)) * 3.0]),
+    }
+
+
+def _mlstm_qkvg(p: Params, x: jnp.ndarray):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    gates = jnp.einsum("bsd,dg->bsg", x, p["w_if"].astype(dt)) \
+        + p["b_if"].astype(dt)
+    h = q.shape[2]
+    i_pre = gates[..., :h].astype(jnp.float32)
+    f_pre = gates[..., h:].astype(jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_seq_ref(p: Params, x: jnp.ndarray,
+                  state: Dict[str, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Sequential mLSTM (scan over time) — exact, stabilized.  Serves as
+    the oracle for the chunkwise form below (and for the Pallas kernel).
+
+    x: [B, S, d].  State: C [B,H,D,D], n [B,H,D], m [B,H].
+    """
+    dt = x.dtype
+    q, k, v, i_pre, f_pre = _mlstm_qkvg(p, x)
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, ip, fp = inp
+        log_f = -jax.nn.softplus(-fp)                 # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, ip)
+        i_ = jnp.exp(ip - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        kt32, vt32, qt32 = (kt.astype(jnp.float32), vt.astype(jnp.float32),
+                            qt.astype(jnp.float32))
+        C = f_[..., None, None] * C + i_[..., None, None] * \
+            (kt32[..., :, None] * vt32[..., None, :])
+        n = f_[..., None] * n + i_[..., None] * kt32
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt32 * scale)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt32 * scale)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), (num / den[..., None]).astype(dt)
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(i_pre, 1, 0),
+          jnp.moveaxis(f_pre, 1, 0))
+    (C, n, m), ys = jax.lax.scan(step, (state["C"], state["n"], state["m"]),
+                                 xs)
+    out = jnp.moveaxis(ys, 0, 1)                      # [B,S,H,D]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return y, {"C": sc(C, "state_bhij"), "n": n, "m": m}
+
+
+def mlstm_chunk_math(q, k, v, i_pre, f_pre, C0, n0, m0, scale: float):
+    """One chunk of the chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: [B,L,H,D] (fp32); i_pre,f_pre: [B,L,H]; state (C0 [B,H,D,D],
+    n0 [B,H,D], m0 [B,H]).  Returns (h [B,L,H,D], C1, n1, m1).
+
+    Math (unrolled recurrence, global decay G_t = sum log_f):
+      weight(t,s) = exp(G_t - G_s + i_s - m_t),  m_t = b_t + max(m0, M_t)
+      with b = intra-chunk cumsum(log_f), a_s = i_s - b_s, M = cummax(a).
+    Everything becomes two [L,L] masked matmuls (MXU-friendly) — the TPU
+    adaptation of xLSTM's sequential cell (DESIGN.md §hardware-adaptation).
+    """
+    b_, l, h, d = q.shape
+    log_f = -jax.nn.softplus(-f_pre)                  # [B,L,H]
+    b = jnp.cumsum(log_f, axis=1)
+    a = i_pre - b                                     # [B,L,H]
+    M = jax.lax.cummax(a, axis=1)
+    mx = jnp.maximum(m0[:, None], M)                  # [B,L,H]
+    m_t = b + mx
+    inter_scale = jnp.exp(m0[:, None] - mx)           # [B,L,H]
+    # intra-chunk masked decay matrix W[t,s] = exp(a_s - mx_t), s <= t
+    w = jnp.exp(a[:, None, :, :] - mx[:, :, None, :])     # [B,t,s,H]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    w = jnp.where(mask[None, :, :, None], w, 0.0)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * scale  # [B,t,s,H]
+    sw = scores * w
+    intra = jnp.einsum("btsh,bshd->bthd", sw, v)
+    inter = jnp.einsum("bthd,bhdv->bthv", q, C0) * \
+        (scale * inter_scale)[..., None]
+    num = inter + intra
+    den_raw = jnp.sum(sw, axis=2) + \
+        jnp.einsum("bthd,bhd->bth", q, n0) * scale * inter_scale
+    den = jnp.maximum(jnp.abs(den_raw), jnp.exp(-m_t))
+    h_out = num / den[..., None]
+    # state update at chunk end
+    mx_e = mx[:, -1]                                  # [B,H]
+    decay = jnp.exp(a - mx_e[:, None])                # [B,L,H]
+    carry_scale = jnp.exp(m0 - mx_e)                  # [B,H]
+    C1 = carry_scale[..., None, None] * C0 + \
+        jnp.einsum("bshd,bshv,bsh->bhdv", k, v, decay)
+    n1 = carry_scale[..., None] * n0 + \
+        jnp.einsum("bshd,bsh->bhd", k, decay)
+    m1 = b[:, -1] + mx_e
+    return h_out, C1, n1, m1
+
+
+def mlstm_seq(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+              chunk: int = 256) -> Tuple[jnp.ndarray,
+                                         Dict[str, jnp.ndarray]]:
+    """Chunkwise-parallel mLSTM (exact; validated against mlstm_seq_ref)."""
+    dt = x.dtype
+    bsz, s, _ = x.shape
+    q, k, v, i_pre, f_pre = _mlstm_qkvg(p, x)
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    l = min(chunk, s)
+    if s % l:
+        l = s                       # odd sizes: single chunk
+    nc = s // l
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(bsz, nc, l, *t.shape[2:]), 1, 0)
+
+    xs = tuple(map(to_chunks, (q.astype(jnp.float32),
+                               k.astype(jnp.float32),
+                               v.astype(jnp.float32), i_pre, f_pre)))
+
+    def step(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = inp
+        h_out, C1, n1, m1 = mlstm_chunk_math(qc, kc, vc, ic, fc, C, n, m,
+                                             scale)
+        return (C1, n1, m1), h_out
+
+    (C, n, m), ys = jax.lax.scan(step, (state["C"], state["n"], state["m"]),
+                                 xs)
+    out = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, q.shape[2], hd)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
+    return y, {"C": sc(C, "state_bhij"), "n": n, "m": m}
+
+
+def mlstm_state(batch: int, n_heads: int, head_dim: int) -> Dict[str, Any]:
+    return {"C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+            "m": jnp.full((batch, n_heads), -1e30, jnp.float32)}
+
+
+def slstm_init(key, d: int, n_heads: int, head_dim: int) -> Params:
+    ks = jax.random.split(key, 3)
+    width = n_heads * head_dim
+    return {
+        "w_in": dense_init(ks[0], d, 4 * width).reshape(d, 4, n_heads,
+                                                        head_dim),
+        "r": truncated_normal(ks[1], (4, n_heads, head_dim, head_dim),
+                              1.0 / math.sqrt(head_dim)),
+        "b": jnp.zeros((4, n_heads, head_dim)),
+        "wo": dense_init(ks[2], width, d).reshape(n_heads, head_dim, d),
+    }
+
+
+def slstm_seq(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """sLSTM with exponential gating + per-head recurrent mixing.
+
+    Gates order: (i, f, z, o).  State: c,n,h [B,H,D], m [B,H,D].
+    """
+    dt = x.dtype
+    pre_all = jnp.einsum("bsd,dghk->bsghk", x, p["w_in"].astype(dt)) \
+        + p["b"].astype(dt)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        # recurrent contribution from h_{t-1}
+        rec = jnp.einsum("bhk,ghkv->bghv", h, p["r"].astype(dt))
+        z_all = (pre_t + rec).astype(jnp.float32)
+        i_pre, f_pre, z_pre, o_pre = (z_all[:, 0], z_all[:, 1],
+                                      z_all[:, 2], z_all[:, 3])
+        log_f = -jax.nn.softplus(-f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_ = jnp.exp(i_pre - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        c_new = f_ * c + i_ * z
+        n_new = f_ * n + i_
+        h_new = (o * c_new / jnp.maximum(n_new, 1.0)).astype(dt)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    carry, ys = jax.lax.scan(step, carry0, jnp.moveaxis(pre_all, 1, 0))
+    out = jnp.moveaxis(ys, 0, 1)                      # [B,S,H,D]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    c, n, h, m = carry
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_state(batch: int, n_heads: int, head_dim: int, dtype
+                ) -> Dict[str, jnp.ndarray]:
+    z32 = jnp.zeros((batch, n_heads, head_dim), jnp.float32)
+    return {"c": z32, "n": z32, "h": jnp.zeros((batch, n_heads, head_dim),
+                                               dtype),
+            "m": jnp.full((batch, n_heads, head_dim), -1e30, jnp.float32)}

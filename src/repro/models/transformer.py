@@ -1,0 +1,228 @@
+"""Generic scanned-layer LM covering dense (minicpm/phi4/qwen1.5),
+gemma2 (alternating local/global + softcaps), qwen2-vl (M-RoPE + patch
+stub), MoE (granite/olmoe), griffin (recurrentgemma) and xLSTM families.
+
+Layers are grouped into *periods* (dense:1, gemma2:2, griffin:3, xlstm:2)
+and scanned over stacked per-period parameters: the HLO contains each
+distinct block body once, which keeps 512-device SPMD compiles fast and is
+also what makes remat policies uniform.  The kind sequence comes from
+``repro.core.cost_model._block_kinds`` — the same source the LLHR planner
+costs, so plan and graph always agree.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.cost_model import _block_kinds as block_kinds
+from repro.models.blocks import BLOCK_KINDS, Ctx
+from repro.models.layers import (cross_entropy, embed_init, embed_lookup,
+                                 lm_head, rmsnorm, rmsnorm_init,
+                                 truncated_normal)
+from repro.parallel.sharding import sc
+
+Params = Dict[str, Any]
+
+_PERIOD = {"full": 1, "local": 1, "alternating": 2, "griffin": 3}
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+class TransformerLM:
+    """Functional LM; params are pytrees, methods are jit-friendly."""
+
+    def __init__(self, cfg: ArchConfig):
+        if cfg.family == "audio":
+            raise ValueError("use repro.models.whisper.WhisperLM")
+        self.cfg = cfg
+        self.kinds = block_kinds(cfg)
+        self.period = 2 if cfg.family == "ssm" \
+            else _PERIOD[cfg.attention.pattern]
+        self.n_full = cfg.n_layers // self.period
+        self.period_kinds = tuple(self.kinds[:self.period])
+        self.rem_kinds = tuple(self.kinds[self.n_full * self.period:])
+        self.dtype = _dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4 + len(self.rem_kinds))
+        params: Params = {
+            "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        blocks = {}
+        for i, kind in enumerate(self.period_kinds):
+            bk = jax.random.fold_in(keys[1], i)
+            bkeys = jax.random.split(bk, self.n_full)
+            blocks[f"b{i}"] = jax.vmap(
+                lambda k: BLOCK_KINDS[kind].init(k, cfg))(bkeys)
+        params["blocks"] = blocks
+        if self.rem_kinds:
+            params["rem"] = [BLOCK_KINDS[k].init(keys[4 + i], cfg)
+                             for i, k in enumerate(self.rem_kinds)]
+        if not cfg.tie_embeddings:
+            params["head"] = {"w": truncated_normal(
+                keys[2], (cfg.vocab_size, cfg.d_model),
+                1.0 / math.sqrt(cfg.d_model))}
+        return params
+
+    # ------------------------------------------------------------------
+    def _embed(self, params: Params, tokens: jnp.ndarray,
+               extra_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens, self.dtype)
+        if cfg.family in ("dense", "moe", "vlm", "hybrid") and \
+                cfg.name.startswith(("gemma", "recurrentgemma")):
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), self.dtype)
+        if extra_embeds is not None:       # vlm patch embeddings (stub)
+            x = jnp.concatenate([extra_embeds.astype(self.dtype), x], axis=1)
+        return sc(x, "act_btd")
+
+    def _positions(self, batch: int, s: int, offset: int = 0) -> jnp.ndarray:
+        pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+        pos = jnp.broadcast_to(pos, (batch, s))
+        if self.cfg.attention.mrope_sections:
+            pos = jnp.broadcast_to(pos[..., None], (batch, s, 3))
+        return pos
+
+    def _head(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        table = params["embed"]["table"] if cfg.tie_embeddings \
+            else params["head"]["w"]
+        return lm_head(table, x, cfg.final_logit_softcap)
+
+    # ------------------------------------------------------------------
+    def _run_stack_nocache(self, params: Params, x: jnp.ndarray,
+                           ctx: Ctx) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Train path: scan over periods, no cache in/out."""
+        period_kinds = self.period_kinds
+
+        def body(carry, pblk):
+            x, aux = carry
+            for i, kind in enumerate(period_kinds):
+                x, _, a = BLOCK_KINDS[kind].apply(pblk[f"b{i}"], x, None, ctx)
+                aux = aux + a
+            return (x, aux), None
+
+        if self.cfg.remat != "none":
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+        for p, kind in zip(params.get("rem", []), self.rem_kinds):
+            x, _, a = BLOCK_KINDS[kind].apply(p, x, None, ctx)
+            aux = aux + a
+        return x, aux
+
+    def _run_stack_prefill(self, params: Params, x: jnp.ndarray,
+                           ctx: Ctx):
+        period_kinds = self.period_kinds
+
+        def body(x, pblk):
+            states = {}
+            for i, kind in enumerate(period_kinds):
+                x, st, _ = BLOCK_KINDS[kind].apply(pblk[f"b{i}"], x, None,
+                                                   ctx)
+                states[f"b{i}"] = st
+            return x, states
+
+        x, cache = jax.lax.scan(body, x, params["blocks"])
+        rem_cache = []
+        for p, kind in zip(params.get("rem", []), self.rem_kinds):
+            x, st, _ = BLOCK_KINDS[kind].apply(p, x, None, ctx)
+            rem_cache.append(st)
+        return x, {"blocks": cache, "rem": rem_cache}
+
+    def _run_stack_decode(self, params: Params, x: jnp.ndarray,
+                          cache, ctx: Ctx):
+        period_kinds = self.period_kinds
+
+        def body(x, xs):
+            pblk, cblk = xs
+            new_states = {}
+            for i, kind in enumerate(period_kinds):
+                x, st, _ = BLOCK_KINDS[kind].apply(pblk[f"b{i}"], x,
+                                                   cblk[f"b{i}"], ctx)
+                new_states[f"b{i}"] = st
+            return x, new_states
+
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["blocks"], cache["blocks"]))
+        rem_cache = []
+        for p, kind, st in zip(params.get("rem", []), self.rem_kinds,
+                               cache.get("rem", [])):
+            x, st2, _ = BLOCK_KINDS[kind].apply(p, x, st, ctx)
+            rem_cache.append(st2)
+        return x, {"blocks": new_cache, "rem": rem_cache}
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def train_loss(self, params: Params, tokens: jnp.ndarray,
+                   labels: jnp.ndarray,
+                   extra_embeds: Optional[jnp.ndarray] = None,
+                   mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Next-token CE.  tokens/labels: [B, S_text]."""
+        x = self._embed(params, tokens, extra_embeds)
+        b, s = x.shape[:2]
+        ctx = Ctx(self.cfg, "train", self._positions(b, s))
+        x, aux = self._run_stack_nocache(params, x, ctx)
+        if extra_embeds is not None:       # loss only on the text positions
+            x = x[:, extra_embeds.shape[1]:]
+        logits = self._head(params, x)
+        loss = cross_entropy(logits, labels, mask)
+        if self.cfg.moe.enabled:
+            loss = loss + self.cfg.moe.aux_loss_weight * \
+                aux / max(self.cfg.n_layers, 1)
+        return loss
+
+    def prefill(self, params: Params, tokens: jnp.ndarray,
+                cache_len: int,
+                extra_embeds: Optional[jnp.ndarray] = None):
+        """Returns (last-position logits [B, V], decode-ready cache)."""
+        x = self._embed(params, tokens, extra_embeds)
+        b, s = x.shape[:2]
+        ctx = Ctx(self.cfg, "prefill", self._positions(b, s),
+                  cache_len=cache_len)
+        x, cache = self._run_stack_prefill(params, x, ctx)
+        logits = self._head(params, x[:, -1:])[:, 0]
+        return logits, cache
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray,
+                    pos: jnp.ndarray, cache):
+        """One token per sequence.  tokens: [B, 1]; pos: [B, 1] int32.
+
+        Returns (logits [B, V], new cache)."""
+        x = self._embed(params, tokens, None)
+        p = pos
+        if self.cfg.attention.mrope_sections:
+            p = jnp.broadcast_to(pos[..., None], pos.shape + (3,))
+        ctx = Ctx(self.cfg, "decode", p)
+        x, new_cache = self._run_stack_decode(params, x, cache, ctx)
+        logits = self._head(params, x)[:, 0]
+        return logits, new_cache
+
+    def init_cache(self, batch: int, cache_len: int):
+        """Zeroed decode cache pytree (stacked over periods)."""
+        cfg = self.cfg
+
+        def one(kind):
+            return BLOCK_KINDS[kind].state_init(cfg, batch, self.dtype,
+                                                cache_len)
+
+        blocks = {}
+        for i, kind in enumerate(self.period_kinds):
+            st = one(kind)
+            blocks[f"b{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (self.n_full,) + a.shape), st)
+        rem = [one(k) for k in self.rem_kinds]
+        return {"blocks": blocks, "rem": rem}

@@ -1,0 +1,64 @@
+"""AdamW in pure JAX (no optax dependency), pytree-native.
+
+Master params and moments stay fp32 regardless of compute dtype; weight
+decay is decoupled; global-norm clipping included.  The optimizer state is
+a flat dict pytree so pjit shardings mirror the param shardings leaf-by-leaf.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def init_opt_state(params: Pytree) -> Dict[str, Pytree]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(params: Pytree, grads: Pytree, opt_state: Dict[str, Pytree],
+                 *, lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1
+                 ) -> Tuple[Pytree, Dict[str, Pytree]]:
+    step = opt_state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mh = m_new / c1
+        vh = v_new / c2
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

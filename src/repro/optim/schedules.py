@@ -1,0 +1,39 @@
+"""LR schedules.  WSD (warmup-stable-decay) is first-class because the
+assigned minicpm-2b architecture trains with it (arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(step, *, peak_lr: float, total_steps: int, warmup_steps: int,
+        decay_frac: float = 0.1, floor: float = 0.0):
+    """Warmup -> Stable -> Decay (1-sqrt decay over the final fraction)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(total_steps * decay_frac, 1.0)
+    decay_start = total_steps - decay_steps
+    warm = step / jnp.maximum(warmup_steps, 1)
+    decay = 1.0 - jnp.sqrt(jnp.clip((step - decay_start) / decay_steps,
+                                    0.0, 1.0))
+    scale = jnp.where(step < warmup_steps, warm,
+                      jnp.where(step < decay_start, 1.0, decay))
+    return floor + (peak_lr - floor) * scale
+
+
+def cosine(step, *, peak_lr: float, total_steps: int, warmup_steps: int,
+           floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float, warmup_steps: int = 0, **_):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.where(step < warmup_steps,
+                     step / jnp.maximum(warmup_steps, 1), 1.0)
+    return peak_lr * warm
+
+
+SCHEDULES = {"wsd": wsd, "cosine": cosine, "constant": constant}

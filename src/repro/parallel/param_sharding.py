@@ -1,0 +1,150 @@
+"""Leaf-path-based parameter/optimizer/cache sharding rules.
+
+FSDP(data) x TP(model): weight matrices shard their model-parallel dim on
+"model" and (ZeRO-3 style) a second dim on the innermost batch axis.  The
+rules key off the leaf's path name + rank; stacked-layer leading dims
+(scan stacks) are padded with None automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def _fsdp_axis(mesh: Mesh) -> Optional[str]:
+    return "data" if "data" in mesh.axis_names else None
+
+
+def _spec_for(name: str, shape: Tuple[int, ...], mesh: Mesh,
+              fsdp: bool, moe: bool, model_shard: bool = True) -> list:
+    """Sharding spec for an UNSTACKED leaf shape (no scan dim).
+
+    ``model_shard=False``: sequence-parallel layout — weights are
+    FSDP-only (activations carry the model axis on their seq dim)."""
+    fs = _fsdp_axis(mesh) if fsdp else None
+    nd = len(shape)
+
+    def fits(axis: Optional[str], dim: int) -> Optional[str]:
+        if axis is None or dim >= nd:
+            return None
+        if axis == "model" and not model_shard and name != "table":
+            return None
+        return axis if shape[dim] % mesh.shape[axis] == 0 else None
+
+    if name in ("wq", "wk", "wv"):            # [d, heads, hd]
+        spec = [fits(fs, 0), fits("model", 1), None]
+    elif name == "wo":                         # [heads, hd, d]
+        spec = [fits("model", 0), None, fits(fs, 2)]
+    elif name in ("w_in", "w_gate", "w_out") and moe:
+        # expert weights: expert-parallel on "model" ONLY.  FSDP-sharding
+        # them too re-gathers the (dominant) expert params every microbatch
+        # — §Perf measured 21.6s -> 0.6s of collective time on olmoe by
+        # keeping them expert-sharded + data-replicated (grad all-reduce
+        # once per step instead of gathers per use).
+        spec = [fits("model", 0), None, None]
+    elif name in ("w_in", "w_gate"):           # [d, ff]
+        spec = [fits(fs, 0), fits("model", 1)]
+    elif name == "w_out":                      # [ff, d]
+        spec = [fits("model", 0), fits(fs, 1)]
+    elif name in ("table", "w") and nd == 2:   # embedding / head [V, d]
+        spec = [fits("model", 0), fits(fs, 1)]
+    elif name == "router":                     # [d, E]
+        spec = [fits(fs, 0), None]
+    elif name == "w_x":                        # rglru in-proj [d, w]
+        spec = [fits(fs, 0), fits("model", 1)]
+    elif name in ("w_a", "w_i"):               # rglru gates [w, w]
+        spec = [None, fits("model", 1)]
+    elif name == "conv_w":                     # [K, w]
+        spec = [None, fits("model", 1)]
+    elif name in ("log_lambda", "b_a", "b_i"):
+        spec = [fits("model", 0)]
+    elif name == "r":                          # slstm [4, h, hd, hd]
+        spec = [None, fits("model", 1), None, None]
+    elif name == "w_if":                       # mlstm gates [d, 2h]
+        spec = [fits(fs, 0), None]
+    elif name in ("bq", "bk", "bv"):           # [h, hd]
+        spec = [fits("model", 0), None]
+    else:                                      # norms, scalars, misc
+        spec = []
+    spec = spec[:nd] + [None] * (nd - len(spec))
+    return spec
+
+
+def _path_names(path) -> list:
+    return [str(e.key) for e in path if hasattr(e, "key")]
+
+
+def param_shardings(mesh: Mesh, tree: Pytree, fsdp: bool = True,
+                    model_shard: bool = True) -> Pytree:
+    """ShapeDtypeStruct/array pytree -> NamedSharding pytree."""
+
+    def one(path, leaf):
+        if np.ndim(leaf) == 0:
+            return NamedSharding(mesh, P())
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        stacked = "blocks" in names
+        moe = "moe" in names
+        shape = np.shape(leaf)
+        base = shape[1:] if stacked else shape
+        spec = _spec_for(name, base, mesh, fsdp, moe, model_shard)
+        if stacked:
+            spec = [None] + spec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def cache_shardings(mesh: Mesh, tree: Pytree,
+                    seq_shard: bool = False) -> Pytree:
+    """Decode-cache pytree -> shardings.
+
+    KV leaves [(stack,) B, S, kv, hd]: batch on the data axes + either
+    kv-heads on "model", or (``seq_shard``) the KV sequence on "model"
+    (the flash-decode layout used at long context).  Recurrent-state
+    leaves shard batch on data and width/heads on "model".
+    """
+    b = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bb = b if len(b) > 1 else (b[0] if b else None)
+    n_batch = int(np.prod([mesh.shape[a] for a in b])) if b else 1
+
+    def kv_name(path) -> str:
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                return str(entry.key)
+        return ""
+
+    def one(path, leaf):
+        shape = np.shape(leaf)
+        nd = len(shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        name = kv_name(path)
+        stacked = any(hasattr(e, "key") and str(e.key) == "blocks"
+                      for e in path)
+        spec = [None] * nd
+        if name in ("k", "v", "cross_k", "cross_v") and nd >= 4:
+            bd = nd - 4
+            if shape[bd] % n_batch == 0 and shape[bd] > 1:
+                spec[bd] = bb
+            if seq_shard and shape[bd + 1] % mesh.shape["model"] == 0:
+                spec[bd + 1] = "model"      # sequence-sharded KV
+            elif shape[bd + 2] % mesh.shape["model"] == 0:
+                spec[bd + 2] = "model"      # head-sharded KV
+        else:
+            bd = 1 if stacked else 0
+            if nd > bd and shape[bd] % n_batch == 0 and shape[bd] > 1:
+                spec[bd] = bb
+            # shard the widest trailing dim on model
+            cand = max(range(bd + 1, nd), key=lambda i: shape[i],
+                       default=None) if nd > bd + 1 else None
+            if cand is not None and shape[cand] % mesh.shape["model"] == 0:
+                spec[cand] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)

@@ -1,0 +1,155 @@
+"""Sharded, checksummed, async checkpointing (numpy-backed; no external
+deps).  Layout:
+
+    <dir>/step_<N>/
+        manifest.json       # tree structure, shapes, dtypes, crc32 per leaf
+        leaf_<i>.npy        # one file per leaf (host-local shard on TPU)
+        COMMIT              # written last: a checkpoint without it is torn
+
+Fault-tolerance contract: ``latest_step`` only returns committed steps, so
+a crash mid-write never restores a torn state.  ``AsyncCheckpointer`` moves
+serialization off the training thread (device->host copy happens at save()
+call time; disk IO in a worker thread), and verifies CRCs on restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_paths(tree: Pytree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out, treedef
+
+
+def save(dir_: str, step: int, tree: Pytree) -> str:
+    """Synchronous save; returns the step directory."""
+    step_dir = os.path.join(dir_, f"step_{step:08d}")
+    tmp = step_dir + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "path": path, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp, step_dir)
+    return step_dir
+
+
+def latest_step(dir_: str) -> Optional[int]:
+    if not os.path.isdir(dir_):
+        return None
+    steps = []
+    for name in os.listdir(dir_):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(dir_, name, "COMMIT")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(dir_: str, step: int, like: Pytree,
+            verify: bool = True) -> Pytree:
+    """Restore into the structure of ``like`` (shapes checked)."""
+    step_dir = os.path.join(dir_, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = _flatten_with_paths(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    leaves = []
+    for path, leaf in flat:
+        e = by_path[path]
+        arr = np.load(os.path.join(step_dir, e["file"]))
+        if verify:
+            crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            if crc != e["crc32"]:
+                raise IOError(f"checksum mismatch for {path} "
+                              f"in {step_dir}")
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {path}: ckpt "
+                             f"{arr.shape} vs expected {np.shape(leaf)}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+def prune(dir_: str, keep: int = 3) -> None:
+    if not os.path.isdir(dir_):
+        return
+    steps = sorted(s for s in (
+        int(n.split("_")[1]) for n in os.listdir(dir_)
+        if n.startswith("step_") and not n.endswith(".tmp")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(dir_, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: save() snapshots to host immediately and
+    enqueues the disk write; wait() drains; errors surface on next call."""
+
+    def __init__(self, dir_: str, keep: int = 3):
+        self.dir = dir_
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save(self.dir, step, tree)
+                prune(self.dir, self.keep)
+            except BaseException as e:     # surfaced on next save()/wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree: Pytree) -> None:
+        if self._err:
+            err, self._err = self._err, None
+            raise err
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err:
+            err, self._err = self._err, None
+            raise err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

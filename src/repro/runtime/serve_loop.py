@@ -1,0 +1,131 @@
+"""Serving runtime: prefill/decode step factories, a block-table KV view,
+and a continuous batcher that keeps decode slots full (vLLM-style at the
+scheduling level; the KV layout itself is the dense per-slot cache the
+models define — TPU-friendly static shapes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ServeConfig
+
+Pytree = Any
+
+
+def make_prefill_step(model, cfg: ArchConfig, cache_len: int):
+    def prefill_step(params, tokens, extra=None):
+        if cfg.family == "audio":
+            return model.prefill(params, tokens, extra, cache_len)
+        if cfg.family == "vlm":
+            return model.prefill(params, tokens, cache_len,
+                                 extra_embeds=extra)
+        return model.prefill(params, tokens, cache_len)
+    return prefill_step
+
+
+def make_decode_step(model, cfg: ArchConfig, temperature: float = 0.0):
+    def decode_step(params, cache, tokens, pos, key):
+        logits, new_cache = model.decode_step(params, tokens, pos, cache)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(key, logits / temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        return nxt.astype(jnp.int32), new_cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Request batching
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class SlotState:
+    rid: int = -1
+    pos: int = 0
+    remaining: int = 0
+
+
+class ContinuousBatcher:
+    """Keeps ``max_batch`` decode slots full; prefill joins empty slots.
+
+    For the CPU-scale examples slots are refilled one request at a time
+    (prefill batch 1 into slot i via cache surgery would need per-slot
+    cache scatter; instead we re-prefill the whole batch when slots
+    change — exact, simple, and fine at example scale).
+    """
+
+    def __init__(self, model, cfg: ArchConfig, scfg: ServeConfig, params):
+        self.model = model
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.prefill_step = jax.jit(
+            make_prefill_step(model, cfg, scfg.max_seq))
+        self.decode_step = jax.jit(
+            make_decode_step(model, cfg, scfg.temperature))
+        self.pending: List[Request] = []
+        self.active: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _batch_prompts(self, reqs: List[Request]) -> np.ndarray:
+        maxlen = max(len(r.prompt) + len(r.out) for r in reqs)
+        toks = np.zeros((len(reqs), maxlen), np.int32)
+        for i, r in enumerate(reqs):
+            seq = r.prompt + r.out
+            toks[i, -len(seq):] = seq          # left-pad
+        return toks
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        key = jax.random.PRNGKey(0)
+        while (self.pending or self.active) and max_steps > 0:
+            while self.pending and len(self.active) < self.scfg.max_batch:
+                self.active.append(self.pending.pop(0))
+            reqs = self.active
+            toks = jnp.asarray(self._batch_prompts(reqs))
+            logits, cache = self.prefill_step(self.params, toks)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            pos = toks.shape[1]
+            for i, r in enumerate(reqs):
+                r.out.append(int(nxt[i]))
+            # decode until any slot finishes, then re-batch
+            steps = min(min(r.max_new - len(r.out) for r in reqs),
+                        self.scfg.max_seq - pos - 1, max_steps)
+            cur = nxt[:, None]
+            for s in range(max(steps, 0)):
+                key, k2 = jax.random.split(key)
+                p = jnp.full((len(reqs), 1), pos + s, jnp.int32)
+                cur_next, cache = self.decode_step(self.params, cache, cur,
+                                                   p, k2)
+                for i, r in enumerate(reqs):
+                    r.out.append(int(cur_next[i]))
+                cur = cur_next[:, None]
+                max_steps -= 1
+            still = []
+            for r in reqs:
+                if len(r.out) >= r.max_new or (r.out and
+                                               r.out[-1] == self.scfg.eos_id):
+                    r.done = True
+                    done.append(r)
+                else:
+                    still.append(r)
+            self.active = still
+            max_steps -= 1
+        return done

@@ -1,0 +1,156 @@
+"""LLHR planner end-to-end + baselines + swarm + cost model tests."""
+import numpy as np
+import pytest
+
+from repro.configs.alexnet import ALEXNET
+from repro.configs.lenet import LENET
+from repro.configs.base import TRAIN_4K, DECODE_32K, ShapeConfig
+from repro.configs.registry import get_arch
+from repro.core import (HeuristicPlanner, LLHRPlanner, RandomPlanner,
+                        RadioChannel, SwarmSim, arch_cost, average_latency,
+                        cnn_cost, make_devices, model_flops, plan_pipeline,
+                        pipeline_efficiency)
+
+
+class TestCostModel:
+    def test_lenet_eq1_values(self):
+        """Hand-checked eq. (1)/(2) values for LeNet."""
+        mc = cnn_cost(LENET)
+        by_name = {l.name: l for l in mc.layers}
+        # conv1: 3 * 5^2 * 6 * 28^2
+        assert by_name["conv1"].flops == 3 * 25 * 6 * 28 * 28
+        # conv2: 6 * 5^2 * 16 * 10^2
+        assert by_name["conv2"].flops == 6 * 25 * 16 * 100
+        # fc1: 400 * 120 (eq. 2)
+        assert by_name["fc1"].flops == 400 * 120
+        assert by_name["fc3"].flops == 84 * 10
+
+    def test_alexnet_scale(self):
+        mc = cnn_cost(ALEXNET)
+        assert 0.6e9 < mc.total_flops < 1.5e9        # ~1.1 GMAC
+        assert 200e6 < mc.total_weight_bytes < 300e6  # ~250 MB fp32
+
+    def test_memory_eq3(self):
+        """m_j = W_j * b (eq. 3): fc1 has (400*120 + 120) fp32 weights."""
+        mc = cnn_cost(LENET)
+        fc1 = {l.name: l for l in mc.layers}["fc1"]
+        assert fc1.weight_bytes == (400 * 120 + 120) * 4
+
+    def test_arch_param_counts(self):
+        for name, lo, hi in [("minicpm-2b", 2.4e9, 3.1e9),
+                             ("gemma2-9b", 8.5e9, 10.5e9),
+                             ("phi4-mini-3.8b", 3.5e9, 4.2e9),
+                             ("olmoe-1b-7b", 6.0e9, 7.5e9)]:
+            n = get_arch(name).n_params
+            assert lo < n < hi, f"{name}: {n}"
+
+    def test_model_flops_train_6nd(self):
+        cfg = get_arch("phi4-mini-3.8b")
+        mf = model_flops(cfg, TRAIN_4K)
+        n = cfg.n_params
+        assert np.isclose(mf, 6 * n * TRAIN_4K.tokens, rtol=1e-6)
+
+    def test_moe_active_params_flops(self):
+        cfg = get_arch("olmoe-1b-7b")
+        mf = model_flops(cfg, DECODE_32K)
+        # active ~1.3B << total 6.9B
+        act = mf / (2 * DECODE_32K.global_batch)
+        assert act < 2.5e9
+
+
+class TestPlannerOrdering:
+    def test_llhr_beats_baselines_lenet(self):
+        ch = RadioChannel()
+        mc = cnn_cost(LENET)
+        devs = make_devices(6)
+        llhr, _ = LLHRPlanner(ch, position_steps=80).plan(mc, devs,
+                                                          [0, 1, 2])
+        heur, _ = HeuristicPlanner(ch).plan(mc, make_devices(6), [0, 1, 2])
+        rand, _ = RandomPlanner(ch).plan(mc, make_devices(6), [0, 1, 2])
+        assert llhr.total_latency <= heur.total_latency + 1e-9
+        assert llhr.total_latency <= rand.total_latency + 1e-9
+        assert llhr.feasible
+
+    def test_latency_increases_with_requests(self):
+        """Fig. 5 trend: avg latency grows once caps bind."""
+        ch = RadioChannel()
+        mc = cnn_cost(ALEXNET)
+        lat = []
+        for rq in (2, 25):
+            devs = make_devices(6)
+            plan, _ = LLHRPlanner(ch, position_steps=60).plan(
+                mc, devs, list(np.arange(rq) % 6))
+            lat.append(plan.total_latency / rq)
+        assert lat[1] >= lat[0] - 1e-9
+
+    def test_latency_decreases_with_memory(self):
+        """Fig. 3 trend (sweeping the eq. 11a cap)."""
+        ch = RadioChannel()
+        mc = cnn_cost(LENET)
+        lats = []
+        for mf in (2e-4, 1.0):
+            devs = make_devices(6, mem_frac=mf)
+            plan, _ = LLHRPlanner(ch, position_steps=60).plan(
+                mc, devs, [0, 1, 2, 3])
+            lats.append(plan.total_latency)
+        assert lats[1] <= lats[0] + 1e-9
+
+    def test_replan_on_failure_is_feasible(self):
+        """The paper's delegation: drop a UAV, re-place, stay feasible."""
+        ch = RadioChannel()
+        mc = cnn_cost(LENET)
+        devs = make_devices(6)
+        pl = LLHRPlanner(ch, position_steps=60)
+        plan, problems = pl.plan(mc, devs, [0, 1])
+        plan2, _ = pl.replan_on_failure(plan, problems, dead=2)
+        assert plan2.feasible
+        assert plan2.positions.shape[0] == 5
+
+    def test_breakdown_sums_to_total(self):
+        ch = RadioChannel()
+        mc = cnn_cost(LENET)
+        devs = make_devices(5)
+        pl = LLHRPlanner(ch, position_steps=60)
+        plan, problems = pl.plan(mc, devs, [0, 1, 2])
+        br = plan.latency_breakdown(problems)
+        assert np.isclose(sum(br.values()), plan.total_latency, rtol=1e-6)
+
+
+class TestSwarmSim:
+    def test_sim_runs_with_failure_injection(self):
+        ch = RadioChannel()
+        mc = cnn_cost(LENET)
+        devs = make_devices(5)
+        sim = SwarmSim(mc, devs, LLHRPlanner(ch, position_steps=50),
+                       requests_per_frame=2, failure_frame=1, failure_uav=1)
+        stats = sim.run(frames=2)
+        assert len(stats) == 2
+        assert stats[1].replanned
+        assert all(s.feasible for s in stats)
+        assert np.isfinite(average_latency(stats))
+
+
+class TestPipelinePlanner:
+    def test_stage_plan_balanced(self):
+        cfg = get_arch("gemma2-9b")
+        sp = plan_pipeline(cfg, TRAIN_4K, n_stages=8, chips_per_stage=32)
+        assert sp.n_stages == 8
+        assert sum(sp.blocks_per_stage) == cfg.n_layers + 2  # embed+head
+        eff = pipeline_efficiency(sp, 32)
+        assert 0.5 < eff <= 1.0
+
+    def test_stage_coords_adjacent(self):
+        """P2 on the torus: consecutive stages land 1 hop apart."""
+        from repro.core import ICIChannel
+        cfg = get_arch("phi4-mini-3.8b")
+        sp = plan_pipeline(cfg, TRAIN_4K, n_stages=6, chips_per_stage=32)
+        ici = ICIChannel()
+        for a, b in zip(sp.stage_coords[:-1], sp.stage_coords[1:]):
+            assert ici.hops(a, b) == 1
+
+    def test_elastic_replan_smaller_swarm(self):
+        from repro.runtime.fault_tolerance import scale_elastic
+        cfg = get_arch("qwen2-vl-2b")
+        for n in (8, 7, 5):
+            sp = scale_elastic(n, cfg, TRAIN_4K, chips_per_stage=32)
+            assert sp.n_stages <= n

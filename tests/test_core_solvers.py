@@ -1,0 +1,187 @@
+"""P1/P2/P3 solver unit tests against the paper's equations."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (Device, PlacementProblem, RadioChannel, RadioParams,
+                        chain_oracle, solve_bnb, solve_brute, solve_chain_dp,
+                        solve_chain_dp_minmax, solve_greedy, solve_power,
+                        solve_random, solve_positions)
+from repro.core.power import exhaustive_refine
+
+
+def dist_matrix(pos):
+    return np.sqrt(((pos[:, None] - pos[None, :]) ** 2).sum(-1))
+
+
+class TestPowerP1:
+    def test_threshold_formula_eq7(self):
+        """P_th = sigma^2/h (exp(K ln2 / B tau) - 1) exactly."""
+        ch = RadioChannel()
+        p = ch.params
+        d = 40.0
+        h = p.h0 / d ** 2
+        expected = ch.noise() / h * (
+            math.exp(p.packet_bits * math.log(2) /
+                     (p.bandwidth_hz * p.tau)) - 1.0)
+        assert np.isclose(ch.power_threshold(d), expected)
+
+    def test_threshold_monotone_in_distance(self):
+        ch = RadioChannel()
+        d = np.array([10.0, 20.0, 40.0, 80.0])
+        th = ch.power_threshold(d)
+        assert np.all(np.diff(th) > 0)
+
+    def test_rate_at_threshold_meets_reliability(self):
+        """Transmitting at P_th moves K_pkt bits within tau (eq. 5+7)."""
+        ch = RadioChannel()
+        d = 40.0
+        p_th = ch.power_threshold(d)
+        rate = ch.rate(d, p_th)
+        assert rate * ch.params.tau >= ch.params.packet_bits * (1 - 1e-9)
+
+    def test_solution_minimal_and_feasible(self):
+        ch = RadioChannel()
+        rng = np.random.default_rng(0)
+        pos = rng.uniform(0, 100, (5, 2))
+        d = dist_matrix(pos)
+        sol = solve_power(d, ch)
+        # feasible: every flagged-feasible UAV meets all used links
+        th = ch.power_threshold(d)
+        np.fill_diagonal(th, 0.0)
+        used = sol.link_feasible & (th <= ch.params.p_max_watts)
+        for i in range(5):
+            if sol.feasible[i]:
+                assert sol.power[i] >= np.max(np.where(used[i], th[i], 0.0)) \
+                    - 1e-12
+        # minimal: matches the paper's exhaustive-search refinement
+        grid = exhaustive_refine(sol, d, ch, grid=100001)
+        assert np.all(sol.power <= grid + 1e-9)
+
+    def test_pmax_gates_feasibility(self):
+        ch = RadioChannel()
+        d = np.array([[0.0, 500.0], [500.0, 0.0]])
+        sol = solve_power(d, ch)
+        assert not sol.link_feasible[0, 1]
+
+
+class TestPositionsP2:
+    def test_chain_oracle_is_optimal_spacing(self):
+        """For a chain, optimum is collinear at exactly 2R (eq. 8d tight)."""
+        pos = chain_oracle(4, radius=20.0)
+        d = dist_matrix(pos)
+        for i in range(3):
+            assert np.isclose(d[i, i + 1], 40.0)
+
+    def test_solver_respects_separation(self):
+        ch = RadioChannel()
+        sol = solve_positions(5, ch, radius=20.0, steps=300, seed=1)
+        d = dist_matrix(sol.positions)
+        np.fill_diagonal(d, np.inf)
+        assert d.min() >= 2 * 20.0 - 0.5   # small tolerance
+        assert sol.max_violation < 0.5
+
+    def test_solver_near_oracle_for_chain(self):
+        """Solver objective within 2x of the analytic chain optimum."""
+        ch = RadioChannel()
+        n = 4
+        links = np.zeros((n, n), bool)
+        for i in range(n - 1):
+            links[i, i + 1] = True
+        sol = solve_positions(n, ch, radius=20.0, links=links, steps=600,
+                              seed=0)
+        d_sol = dist_matrix(sol.positions)
+        d_orc = dist_matrix(chain_oracle(n, 20.0))
+        obj_sol = sum(d_sol[i, i + 1] ** 2 for i in range(n - 1))
+        obj_orc = sum(d_orc[i, i + 1] ** 2 for i in range(n - 1))
+        assert obj_sol <= 2.0 * obj_orc
+
+
+def small_problem(L=4, U=3, seed=0, tight=False):
+    rng = np.random.default_rng(seed)
+    compute = rng.uniform(1e5, 1e6, L)
+    memory = rng.uniform(1e4, 1e5, L)
+    act = rng.uniform(1e3, 1e5, L)
+    devices = [Device(f"d{i}", mem_cap=(2e5 if tight else 1e9),
+                      compute_cap=(1.5e6 if tight else 1e12),
+                      throughput=rng.uniform(2e8, 6e8)) for i in range(U)]
+    rate = np.full((U, U), 1e8)
+    np.fill_diagonal(rate, np.inf)
+    return PlacementProblem(compute, memory, act, devices, rate,
+                            source=0, input_bits=1e4)
+
+
+class TestPlacementP3:
+    def test_bnb_matches_brute_force(self):
+        for seed in range(5):
+            p1 = small_problem(seed=seed, tight=True)
+            p2 = small_problem(seed=seed, tight=True)
+            s_bnb = solve_bnb(p1)
+            s_brute = solve_brute(p2)
+            assert np.isclose(s_bnb.latency, s_brute.latency, rtol=1e-9), \
+                f"seed {seed}"
+
+    def test_solver_ordering(self):
+        """exact <= greedy; both <= random (objective eq. 11)."""
+        for seed in range(5):
+            p = small_problem(seed=seed)
+            s_exact = solve_bnb(small_problem(seed=seed))
+            s_greedy = solve_greedy(small_problem(seed=seed))
+            s_rand = solve_random(small_problem(seed=seed), seed=seed)
+            assert s_exact.latency <= s_greedy.latency + 1e-9
+            assert s_exact.latency <= s_rand.latency + 1e-9
+
+    def test_caps_respected_eq11a_11b(self):
+        p = small_problem(tight=True, seed=3)
+        sol = solve_bnb(p)
+        assert sol.assign
+        mem = np.zeros(p.U)
+        cmp_ = np.zeros(p.U)
+        for j, i in enumerate(sol.assign):
+            mem[i] += p.memory[j]
+            cmp_[i] += p.compute[j]
+        for i, d in enumerate(p.devices):
+            assert mem[i] <= d.mem_cap + 1e-9
+            assert cmp_[i] <= d.compute_cap + 1e-9
+
+    def test_every_layer_placed_once_eq11c(self):
+        p = small_problem()
+        sol = solve_bnb(p)
+        assert len(sol.assign) == p.L
+
+    def test_latency_matches_manual_eq11(self):
+        p = small_problem(seed=7)
+        assign = (0, 1, 1, 2)
+        t = p.input_bits / p.rate[0, 0] if False else 0.0
+        t += p.transfer_time(p.source, 0, p.input_bits)
+        for j, i in enumerate(assign):
+            t += p.compute[j] / p.devices[i].throughput
+            if j + 1 < len(assign) and assign[j] != assign[j + 1]:
+                t += p.act_bits[j] / p.rate[assign[j], assign[j + 1]]
+        assert np.isclose(p.latency(assign), t)
+
+    def test_chain_dp_contiguous_optimal(self):
+        """Min-sum DP beats any manually contiguous split."""
+        p = small_problem(seed=2)
+        sol = solve_chain_dp(small_problem(seed=2))
+        for split in range(1, p.L):
+            assign = tuple([0] * split + [1] * (p.L - split))
+            if p.feasible(assign):
+                assert sol.latency <= p.latency(assign) + 1e-9
+
+    def test_minmax_uses_exact_stage_count(self):
+        p = small_problem(L=8, U=4, seed=5)
+        sol = solve_chain_dp_minmax(p, n_stages=4)
+        assert len(set(sol.assign)) == 4
+        # bottleneck <= the uniform split's bottleneck
+        uni = [i * 4 // 8 for i in range(8)]
+        worst = max(sum(p.compute[j] for j in range(8) if uni[j] == s) /
+                    p.devices[s].throughput for s in range(4))
+        assert sol.latency <= worst * 1.5 + 1e-9
+
+    def test_infeasible_reported(self):
+        p = small_problem(tight=True)
+        for d in range(len(p.devices)):
+            p.mem_used[d] = 1e18
+        assert not solve_bnb(p).assign

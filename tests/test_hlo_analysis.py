@@ -1,0 +1,91 @@
+"""The loop-aware HLO profiler, tested against graphs with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import parse_hlo, profile
+from repro.launch.roofline import Roofline
+
+
+def compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestDotFlops:
+    def test_single_matmul_exact(self):
+        a = jnp.zeros((128, 256), jnp.float32)
+        b = jnp.zeros((256, 512), jnp.float32)
+        text = compiled_text(lambda a, b: a @ b, a, b)
+        prof = profile(text)
+        assert prof.dot_flops == pytest.approx(2 * 128 * 256 * 512, rel=.01)
+
+    def test_scan_multiplies_by_trip_count(self):
+        """cost_analysis counts a while body once; the profiler must
+        multiply by the trip count."""
+        w = jnp.zeros((64, 64), jnp.float32)
+        x = jnp.zeros((8, 64), jnp.float32)
+
+        def fn(w, x):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, None, length=10)
+            return y
+
+        prof = profile(compiled_text(fn, w, x))
+        expect = 10 * 2 * 8 * 64 * 64
+        assert prof.dot_flops == pytest.approx(expect, rel=0.05)
+        assert any(t == 10 for _, t in prof.loops)
+
+    def test_nested_scans_multiply(self):
+        w = jnp.zeros((32, 32), jnp.float32)
+        x = jnp.zeros((4, 32), jnp.float32)
+
+        def fn(w, x):
+            def outer(c, _):
+                def inner(ci, _):
+                    return ci @ w, None
+                c2, _ = jax.lax.scan(inner, c, None, length=5)
+                return c2, None
+            y, _ = jax.lax.scan(outer, x, None, length=3)
+            return y
+
+        prof = profile(compiled_text(fn, w, x))
+        expect = 3 * 5 * 2 * 4 * 32 * 32
+        assert prof.dot_flops == pytest.approx(expect, rel=0.05)
+
+
+class TestTraffic:
+    def test_elementwise_traffic_scale(self):
+        x = jnp.zeros((1024, 1024), jnp.float32)
+        prof = profile(compiled_text(lambda x: x * 2.0 + 1.0, x))
+        # one read + one write of 4MB, allow fusion slack
+        assert 4e6 < prof.traffic_bytes < 5e7
+
+
+class TestRooflineTerms:
+    def test_bottleneck_selection(self):
+        r = Roofline(flops_dev=197e12, bytes_dev=0, coll_bytes_dev=0,
+                     pod_bytes_dev=0, n_chips=1, model_flops=197e12)
+        assert r.bottleneck == "compute"
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.roofline_fraction == pytest.approx(1.0)
+
+    def test_pod_bytes_use_dcn_bandwidth(self):
+        r = Roofline(flops_dev=0, bytes_dev=0, coll_bytes_dev=6.25e9,
+                     pod_bytes_dev=6.25e9, n_chips=512, model_flops=1.0)
+        assert r.collective_s == pytest.approx(1.0)   # all bytes on DCN
+
+    def test_useful_ratio(self):
+        r = Roofline(flops_dev=2.0, bytes_dev=0, coll_bytes_dev=0,
+                     pod_bytes_dev=0, n_chips=10, model_flops=10.0)
+        assert r.useful_ratio == pytest.approx(0.5)
+
+
+class TestParser:
+    def test_parse_computations(self):
+        x = jnp.zeros((8, 8), jnp.float32)
+        text = compiled_text(lambda x: jnp.tanh(x @ x), x)
+        comps = parse_hlo(text)
+        assert comps
+        assert any(len(c.instrs) > 0 for c in comps.values())

@@ -1,0 +1,149 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle,
+across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,s,d,causal,window,cap",
+    [(1, 2, 2, 128, 32, True, 0, 0.0),
+     (2, 4, 2, 256, 64, True, 0, 50.0),
+     (1, 2, 1, 256, 32, True, 64, 0.0),
+     (1, 2, 2, 128, 64, False, 0, 0.0),
+     (1, 8, 4, 384, 128, True, 128, 30.0)])
+def test_flash_attention(b, h, kv, s, d, causal, window, cap, dtype):
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (b, h, s, d), dtype)
+    k = rand(ks[1], (b, kv, s, d), dtype)
+    v = rand(ks[2], (b, kv, s, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                          block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,kv,g,s,d,cap",
+                         [(2, 2, 4, 512, 64, 0.0),
+                          (1, 4, 1, 1024, 32, 50.0),
+                          (3, 1, 8, 256, 128, 0.0)])
+def test_decode_attention(b, kv, g, s, d, cap, dtype):
+    from repro.kernels.decode_attention.decode_attention import \
+        decode_attention
+    from repro.kernels.decode_attention.ref import decode_ref
+    ks = jax.random.split(KEY, 4)
+    q = rand(ks[0], (b, kv, g, d), dtype)
+    k = rand(ks[1], (b, kv, s, d), dtype)
+    v = rand(ks[2], (b, kv, s, d), dtype)
+    pos = jax.random.randint(ks[3], (b,), 1, s)
+    out = decode_attention(q, k, v, pos, cap=cap, block_k=128)
+    ref = decode_ref(q, k, v, pos, cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,w,block",
+                         [(2, 64, 256, 128), (1, 128, 128, 64),
+                          (3, 32, 384, 128)])
+def test_rglru_scan(b, t, w, block, dtype):
+    from repro.kernels.rglru_scan.ref import rglru_ref
+    from repro.kernels.rglru_scan.rglru_scan import rglru_scan
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(rand(ks[0], (b, t, w), dtype).astype(jnp.float32)) \
+        .astype(dtype)
+    bb = (rand(ks[1], (b, t, w), dtype).astype(jnp.float32) * 0.1) \
+        .astype(dtype)
+    h0 = rand(ks[2], (b, w), dtype)
+    h, hT = rglru_scan(a, bb, h0, block_w=block)
+    hr, hTr = rglru_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(hr, np.float32),
+                               atol=TOL[dtype] * 5, rtol=TOL[dtype] * 10)
+    np.testing.assert_allclose(np.asarray(hT, np.float32),
+                               np.asarray(hTr, np.float32),
+                               atol=TOL[dtype] * 5, rtol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f", [(4, 64, 96, 160), (8, 32, 128, 64),
+                                     (2, 128, 64, 256)])
+def test_moe_matmul(e, c, d, f, dtype):
+    from repro.kernels.moe_matmul.moe_matmul import moe_matmul
+    from repro.kernels.moe_matmul.ref import moe_matmul_ref
+    ks = jax.random.split(KEY, 2)
+    x = rand(ks[0], (e, c, d), dtype)
+    w = rand(ks[1], (e, d, f), dtype)
+    y = moe_matmul(x, w, block_c=32, block_f=64, block_d=32)
+    yr = moe_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=TOL[dtype] * d ** 0.5,
+                               rtol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("n,hw,cin,cout,k,stride,pad",
+                         [(2, 16, 3, 8, 5, 2, 2),
+                          (1, 28, 6, 16, 5, 1, 0),
+                          (2, 13, 256, 384, 3, 1, 1)])
+def test_conv2d_im2col(n, hw, cin, cout, k, stride, pad):
+    from repro.kernels.conv2d.ops import conv2d
+    from repro.kernels.conv2d.ref import conv2d_ref
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (n, hw, hw, cin))
+    w = jax.random.normal(ks[1], (k, k, cin, cout)) * 0.1
+    b = jnp.zeros((cout,))
+    y = conv2d(x, w, b, stride=stride, padding=pad)
+    yr = conv2d_ref(x, w, b, stride=stride, padding=pad)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,h,s,d,chunk", [(2, 3, 128, 32, 16),
+                                           (1, 2, 64, 64, 64),
+                                           (2, 1, 256, 32, 128)])
+def test_mlstm_chunk_kernel(b, h, s, d, chunk):
+    from repro.kernels.mlstm_chunk.mlstm_chunk import mlstm_chunk
+    from repro.kernels.mlstm_chunk.ref import mlstm_ref
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, h, s, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, s, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, s, d)) * 0.5
+    ip = jax.random.normal(ks[3], (b, h, s))
+    fp = jax.random.normal(ks[4], (b, h, s)) + 3.0
+    out = mlstm_chunk(q, k, v, ip, fp, chunk=chunk)
+    ref = mlstm_ref(q, k, v, ip, fp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4,
+                               rtol=1e-3)
+
+
+def test_flash_attention_ops_wrapper_layout():
+    """ops.mha adapts [B,S,H,D] <-> kernel layout and matches the model's
+    attention math."""
+    from repro.kernels.flash_attention.ops import mha
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    out_k = mha(q, k, v, causal=True, use_kernel=True)
+    out_r = mha(q, k, v, causal=True, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5, rtol=1e-4)

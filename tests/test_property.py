@@ -1,0 +1,151 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Device, PlacementProblem, RadioChannel, RadioParams,
+                        solve_bnb, solve_brute, solve_chain_dp_minmax,
+                        solve_greedy, solve_power)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def placement_problems(draw, max_l=5, max_u=4):
+    L = draw(st.integers(2, max_l))
+    U = draw(st.integers(2, max_u))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    compute = rng.uniform(1e4, 1e6, L)
+    memory = rng.uniform(1e3, 1e5, L)
+    act = rng.uniform(1e3, 1e5, L)
+    tight = draw(st.booleans())
+    devices = [Device(f"d{i}",
+                      mem_cap=rng.uniform(5e4, 2e5) if tight else 1e9,
+                      compute_cap=rng.uniform(5e5, 2e6) if tight else 1e12,
+                      throughput=rng.uniform(1e8, 6e8)) for i in range(U)]
+    rate = rng.uniform(1e7, 1e9, (U, U))
+    rate = (rate + rate.T) / 2
+    np.fill_diagonal(rate, np.inf)
+    return PlacementProblem(compute, memory, act, devices, rate,
+                            source=draw(st.integers(0, U - 1)),
+                            input_bits=rng.uniform(1e3, 1e5))
+
+
+def clone(p):
+    return PlacementProblem(p.compute, p.memory, p.act_bits,
+                            p.devices, p.rate, source=p.source,
+                            input_bits=p.input_bits)
+
+
+class TestPlacementProperties:
+    @given(placement_problems())
+    @settings(**SETTINGS)
+    def test_bnb_is_exact(self, p):
+        """Branch-and-bound == brute force on every instance."""
+        s1 = solve_bnb(clone(p))
+        s2 = solve_brute(clone(p))
+        if not s2.assign:
+            assert not s1.assign
+        else:
+            assert np.isclose(s1.latency, s2.latency, rtol=1e-9)
+
+    @given(placement_problems())
+    @settings(**SETTINGS)
+    def test_exact_never_worse_than_greedy(self, p):
+        s_exact = solve_bnb(clone(p))
+        s_greedy = solve_greedy(clone(p))
+        if s_greedy.assign and s_exact.assign:
+            assert s_exact.latency <= s_greedy.latency + 1e-9
+        if s_greedy.assign:
+            assert s_exact.assign   # exact finds one whenever greedy does
+
+    @given(placement_problems())
+    @settings(**SETTINGS)
+    def test_feasibility_of_solution(self, p):
+        """Caps (11a/11b) hold; every layer placed exactly once (11c)."""
+        sol = solve_bnb(clone(p))
+        if not sol.assign:
+            return
+        assert len(sol.assign) == p.L
+        mem = np.zeros(p.U)
+        cmp_ = np.zeros(p.U)
+        for j, i in enumerate(sol.assign):
+            mem[i] += p.memory[j]
+            cmp_[i] += p.compute[j]
+        for i, d in enumerate(p.devices):
+            assert mem[i] <= d.mem_cap + 1e-6
+            assert cmp_[i] <= d.compute_cap + 1e-6
+
+    @given(placement_problems(), st.integers(0, 100))
+    @settings(**SETTINGS)
+    def test_latency_objective_nonnegative_and_consistent(self, p, seed):
+        rng = np.random.default_rng(seed)
+        assign = tuple(int(x) for x in rng.integers(0, p.U, p.L))
+        lat = p.latency(assign)
+        assert lat >= 0.0
+        # adding a device change can only add transfer time
+        same = tuple([assign[0]] * p.L)
+        if p.feasible(same):
+            lat_chain = p.latency(assign)
+            comp_only = p.transfer_time(p.source, same[0], p.input_bits) \
+                + sum(p.compute_time(same[0], j) for j in range(p.L))
+            assert p.latency(same) <= comp_only + 1e-9
+
+
+class TestPowerProperties:
+    @given(st.integers(2, 8), st.integers(0, 2 ** 31),
+           st.sampled_from([5e6, 10e6, 20e6]))
+    @settings(**SETTINGS)
+    def test_power_monotone_in_bandwidth(self, n, seed, bw):
+        """Fig. 4 trend as a property: more bandwidth => less power
+        (comparable only when the lower-bandwidth swarm is fully
+        connected — an infeasible swarm reports zero used power)."""
+        rng = np.random.default_rng(seed)
+        pos = rng.uniform(0, 120, (n, 2))
+        d = np.sqrt(((pos[:, None] - pos[None, :]) ** 2).sum(-1))
+        p_lo = solve_power(d, RadioChannel(RadioParams(bandwidth_hz=bw)))
+        p_hi = solve_power(d, RadioChannel(RadioParams(bandwidth_hz=2 * bw)))
+        if bool(np.all(p_lo.link_feasible)):
+            assert p_hi.total_power <= p_lo.total_power + 1e-12
+
+    @given(st.integers(2, 8), st.integers(0, 2 ** 31))
+    @settings(**SETTINGS)
+    def test_threshold_scales_with_distance_squared(self, n, seed):
+        ch = RadioChannel()
+        rng = np.random.default_rng(seed)
+        d = rng.uniform(5, 100, n)
+        th1 = ch.power_threshold(d)
+        th2 = ch.power_threshold(2 * d)
+        np.testing.assert_allclose(th2 / th1, 4.0, rtol=1e-9)
+
+
+class TestMinmaxProperties:
+    @given(placement_problems(max_l=6, max_u=3))
+    @settings(**SETTINGS)
+    def test_minmax_bottleneck_lower_bounds_sum(self, p):
+        """Pipeline period <= end-to-end latency of the same partition."""
+        n_stages = min(p.U, p.L)
+        sol = solve_chain_dp_minmax(clone(p), n_stages)
+        if not sol.assign:
+            return
+        assert sol.latency <= clone(p).latency(sol.assign) + 1e-9
+
+
+class TestCheckpointProperties:
+    @given(st.lists(st.integers(1, 6), min_size=1, max_size=3),
+           st.integers(0, 2 ** 31))
+    @settings(max_examples=10, deadline=None)
+    def test_roundtrip_arbitrary_trees(self, dims, seed):
+        import tempfile
+        from repro.runtime import checkpoint as ckpt
+        rng = np.random.default_rng(seed)
+        tree = {f"k{i}": rng.normal(size=tuple(dims)).astype(np.float32)
+                for i in range(3)}
+        tree["nested"] = {"s": np.asarray(seed % 1000)}
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 0, tree)
+            got = ckpt.restore(d, 0, tree)
+            for k in ("k0", "k1", "k2"):
+                np.testing.assert_array_equal(got[k], tree[k])

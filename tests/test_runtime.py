@@ -1,0 +1,215 @@
+"""Runtime tests: training convergence, checkpoint durability, fault
+tolerance / straggler mitigation, serving batcher, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig, TrainConfig
+from repro.configs.registry import get_arch
+from repro.core.placement import Device
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM, lm_data
+from repro.models import build_model
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.fault_tolerance import (FaultTolerantRunner,
+                                           HealthTracker, scale_elastic)
+from repro.runtime.serve_loop import ContinuousBatcher, Request
+from repro.runtime.train_loop import init_state, make_train_step, train_loop
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_cfg():
+    return get_arch("phi4-mini-3.8b").reduced()
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        cfg = tiny_cfg()
+        model = build_model(cfg)
+        tcfg = TrainConfig(steps=30, lr=3e-3, warmup_steps=5,
+                           schedule="wsd")
+        data = lm_data(cfg, batch=8, seq_len=32, prefetch=0)
+        _, hist = train_loop(model, cfg, tcfg, iter(data))
+        first = np.mean([h["loss"] for h in hist[:5]])
+        last = np.mean([h["loss"] for h in hist[-5:]])
+        assert last < first - 0.2, f"{first} -> {last}"
+
+    def test_grad_accumulation_matches_full_batch(self):
+        cfg = tiny_cfg()
+        model = build_model(cfg)
+        data = next(iter(lm_data(cfg, batch=8, seq_len=16, prefetch=0)))
+        batch = {k: jnp.asarray(v) for k, v in data.items()}
+        s1 = init_state(model, KEY, TrainConfig(microbatches=1))
+        s2 = init_state(model, KEY, TrainConfig(microbatches=4))
+        st1, m1 = make_train_step(model, cfg, TrainConfig(
+            microbatches=1))(s1, batch)
+        st2, m2 = make_train_step(model, cfg, TrainConfig(
+            microbatches=4))(s2, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-4)
+        g1 = jax.tree.leaves(st1["params"])[0]
+        g2 = jax.tree.leaves(st2["params"])[0]
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   atol=1e-4)
+
+    def test_grad_compress_error_feedback(self):
+        """Compressed training still converges (error feedback works)."""
+        cfg = tiny_cfg()
+        model = build_model(cfg)
+        tcfg = TrainConfig(steps=25, lr=3e-3, warmup_steps=5,
+                           grad_compress=True)
+        data = lm_data(cfg, batch=8, seq_len=32, prefetch=0)
+        _, hist = train_loop(model, cfg, tcfg, iter(data))
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_wsd_schedule_shape(self):
+        from repro.optim.schedules import wsd
+        lr = [float(wsd(s, peak_lr=1.0, total_steps=100, warmup_steps=10,
+                        decay_frac=0.2)) for s in range(100)]
+        assert lr[0] < 0.2                       # warmup start
+        assert abs(lr[50] - 1.0) < 1e-6          # stable plateau
+        assert lr[99] < 0.2                      # decayed
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "b": {"c": np.ones(5, np.int32),
+                      "step": np.asarray(7)}}
+        ckpt.save(str(tmp_path), 3, tree)
+        assert ckpt.latest_step(str(tmp_path)) == 3
+        got = ckpt.restore(str(tmp_path), 3, tree)
+        np.testing.assert_array_equal(got["a"], tree["a"])
+        np.testing.assert_array_equal(got["b"]["c"], tree["b"]["c"])
+
+    def test_torn_checkpoint_ignored(self, tmp_path):
+        """A step dir without COMMIT never becomes 'latest' (crash mid-
+        write safety)."""
+        tree = {"x": np.ones(3)}
+        ckpt.save(str(tmp_path), 1, tree)
+        torn = os.path.join(str(tmp_path), "step_00000002")
+        os.makedirs(torn)
+        with open(os.path.join(torn, "manifest.json"), "w") as f:
+            f.write("{}")
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+    def test_corruption_detected(self, tmp_path):
+        tree = {"x": np.ones(8, np.float32)}
+        path = ckpt.save(str(tmp_path), 1, tree)
+        leaf = os.path.join(path, "leaf_0.npy")
+        arr = np.load(leaf)
+        arr[0] = 42.0
+        np.save(leaf, arr)
+        with pytest.raises(IOError):
+            ckpt.restore(str(tmp_path), 1, tree)
+
+    def test_async_checkpointer(self, tmp_path):
+        tree = {"x": np.arange(6, dtype=np.float32)}
+        ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+        for step in (1, 2, 3):
+            ac.save(step, jax.tree.map(lambda a: a * step, tree))
+        ac.close()
+        assert ckpt.latest_step(str(tmp_path)) == 3
+        got = ckpt.restore(str(tmp_path), 3, tree)
+        np.testing.assert_array_equal(got["x"], tree["x"] * 3)
+        assert ckpt.latest_step(str(tmp_path)) == 3  # pruned to keep=2
+
+    def test_train_resume_from_checkpoint(self, tmp_path):
+        cfg = tiny_cfg()
+        model = build_model(cfg)
+        tcfg = TrainConfig(steps=6, lr=1e-3)
+        data = lm_data(cfg, batch=4, seq_len=16, prefetch=0)
+        state, _ = train_loop(model, cfg, tcfg, iter(data))
+        ckpt.save(str(tmp_path), 6, state)
+        like = init_state(model, KEY, tcfg)
+        restored = ckpt.restore(str(tmp_path), 6, like)
+        assert int(restored["opt"]["step"]) == 6
+        # resume two more steps
+        tcfg2 = TrainConfig(steps=8, lr=1e-3)
+        state2, hist = train_loop(model, cfg, tcfg2, iter(data),
+                                  state=jax.tree.map(jnp.asarray, restored))
+        assert len(hist) == 2
+
+
+class TestFaultTolerance:
+    def _runner(self, tmp_path, n=6):
+        devices = [Device(f"d{i}", 1e9, 1e12, 5e8) for i in range(n)]
+        calls = []
+
+        def replan(devs):
+            calls.append(len(devs))
+            return {"n": len(devs)}
+
+        return FaultTolerantRunner(devices, replan, str(tmp_path)), calls
+
+    def test_failure_triggers_replan(self, tmp_path):
+        runner, calls = self._runner(tmp_path)
+        plan = runner.on_failure(["d2"])
+        assert plan["n"] == 5
+        assert runner.state.generation == 1
+        assert runner.events[-1]["kind"] == "failure"
+
+    def test_heartbeat_timeout_detection(self, tmp_path):
+        runner, _ = self._runner(tmp_path)
+        now = 1000.0
+        for d in runner.health.devices.values():
+            runner.health.heartbeat(d.name, 0.1, now=now)
+        runner.health.heartbeat("d0", 0.1, now=now + 100)
+        dead, slow = runner.health.scan(now=now + 100)
+        assert set(dead) == {f"d{i}" for i in range(1, 6)}
+
+    def test_straggler_demoted_and_replanned(self, tmp_path):
+        runner, calls = self._runner(tmp_path)
+        now = 0.0
+        for i, d in enumerate(runner.health.devices.values()):
+            for _ in range(5):
+                runner.health.heartbeat(d.name, 2.0 if d.name == "d3"
+                                        else 0.1, now=now)
+        plan = runner.tick(now=now + 1)
+        assert plan is not None
+        assert runner.events[-1]["kind"] == "straggler"
+        d3 = [d for d in runner.state.devices if d.name == "d3"][0]
+        assert d3.throughput < 5e8
+
+    def test_all_dead_raises(self, tmp_path):
+        runner, _ = self._runner(tmp_path, n=2)
+        with pytest.raises(RuntimeError):
+            runner.on_failure(["d0", "d1"])
+
+
+class TestServing:
+    def test_continuous_batcher_completes_requests(self):
+        cfg = tiny_cfg()
+        model = build_model(cfg)
+        params = model.init(KEY)
+        scfg = ServeConfig(max_batch=2, max_seq=64, decode_steps=4)
+        batcher = ContinuousBatcher(model, cfg, scfg, params)
+        for rid in range(3):
+            batcher.submit(Request(rid, prompt=[2, 3, 4 + rid], max_new=6))
+        done = batcher.run(max_steps=200)
+        assert len(done) == 3
+        for r in done:
+            assert len(r.out) >= 1
+            assert all(0 <= t < cfg.vocab_size for t in r.out)
+
+
+class TestData:
+    def test_synthetic_structure_learnable(self):
+        d = SyntheticLM(DataConfig(batch=4, seq_len=64, vocab_size=97,
+                                   structure=1.0))
+        b = d.batch()
+        # fully structured: labels follow the affine grammar
+        nxt = (d.a * b["tokens"] + d.c) % 97
+        assert np.mean(nxt == b["labels"]) == 1.0
+
+    def test_hosts_get_different_streams(self):
+        b0 = SyntheticLM(DataConfig(host_id=0, n_hosts=2)).batch()
+        b1 = SyntheticLM(DataConfig(host_id=1, n_hosts=2)).batch()
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_prefetcher_preserves_order(self):
+        it = Prefetcher(iter(range(10)), depth=3)
+        assert list(it) == list(range(10))

@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's claims, asserted as tests (EXPERIMENTS.md §Paper-validation):
+  Fig 2: latency falls as P_max / #UAVs / bandwidth rise.
+  Fig 4: min transmit power falls as bandwidth / #UAVs rise.
+  Fig 5: LLHR <= heuristic <= random.
+Plus the distributed-inference invariant: partitioned execution returns
+bit-identical predictions, and failure delegation keeps the mission alive.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.lenet import LENET
+from repro.configs.alexnet import ALEXNET
+from repro.core import (HeuristicPlanner, LLHRPlanner, RandomPlanner,
+                        RadioChannel, RadioParams, cnn_cost, make_devices)
+
+
+def run_llhr(mc, n_uavs=6, requests=4, params=None, seed=0):
+    ch = RadioChannel(params or RadioParams())
+    devs = make_devices(n_uavs)
+    pl = LLHRPlanner(ch, position_steps=60, seed=seed)
+    plan, problems = pl.plan(mc, devs, list(np.arange(requests) % n_uavs))
+    return plan, problems
+
+
+class TestFig2Claims:
+    def test_latency_falls_with_pmax(self):
+        """Higher P_max admits longer reliable links => more placement
+        freedom => latency can only improve."""
+        mc = cnn_cost(ALEXNET)
+        lats = []
+        for pmax in (0.04, 0.120, 0.50):
+            plan, _ = run_llhr(mc, params=RadioParams(p_max_watts=pmax))
+            lats.append(plan.total_latency)
+        assert lats[2] <= lats[1] + 1e-9 <= lats[0] + 2e-9
+
+    def test_latency_falls_with_more_uavs(self):
+        mc = cnn_cost(ALEXNET)
+        lat_small = run_llhr(mc, n_uavs=3, requests=6)[0].total_latency
+        lat_big = run_llhr(mc, n_uavs=9, requests=6)[0].total_latency
+        assert lat_big <= lat_small + 1e-9
+
+    def test_latency_falls_with_bandwidth(self):
+        mc = cnn_cost(ALEXNET)
+        lat10 = run_llhr(mc, params=RadioParams(bandwidth_hz=10e6))[0]
+        lat20 = run_llhr(mc, params=RadioParams(bandwidth_hz=20e6))[0]
+        assert lat20.total_latency <= lat10.total_latency + 1e-9
+
+
+class TestFig4Claims:
+    def test_min_power_falls_with_bandwidth(self):
+        mc = cnn_cost(LENET)
+        p10 = run_llhr(mc, params=RadioParams(bandwidth_hz=10e6))[0]
+        p20 = run_llhr(mc, params=RadioParams(bandwidth_hz=20e6))[0]
+        assert p20.total_power <= p10.total_power + 1e-12
+
+
+class TestFig5Claims:
+    @pytest.mark.parametrize("model", ["lenet", "alexnet"])
+    def test_planner_ordering(self, model):
+        mc = cnn_cost(LENET if model == "lenet" else ALEXNET)
+        ch = RadioChannel()
+        n, rq = 6, 6
+        reqs = list(np.arange(rq) % n)
+        llhr, _ = LLHRPlanner(ch, position_steps=60).plan(
+            mc, make_devices(n), reqs)
+        heur, _ = HeuristicPlanner(ch).plan(mc, make_devices(n), reqs)
+        rand_best = min(
+            RandomPlanner(ch, seed=s).plan(mc, make_devices(n), reqs)[0]
+            .total_latency for s in range(3))
+        assert llhr.total_latency <= heur.total_latency + 1e-9
+        assert llhr.total_latency <= rand_best + 1e-9
+
+
+class TestDistributedInferenceInvariants:
+    def test_placement_preserves_prediction(self):
+        """Run LeNet partitioned per the LLHR placement: same logits."""
+        import jax
+        from repro.models.cnn import distributed_forward, forward, init_cnn
+        mc = cnn_cost(LENET)
+        plan, problems = run_llhr(mc, n_uavs=5, requests=1)
+        assign = list(plan.placements[0].assign)
+        params = init_cnn(jax.random.PRNGKey(0), LENET)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+        y_mono = forward(LENET, params, x)
+        y_dist, _ = distributed_forward(LENET, params, x, assign)
+        np.testing.assert_array_equal(np.asarray(y_mono),
+                                      np.asarray(y_dist))
+
+    def test_failure_delegation_keeps_mission_alive(self):
+        mc = cnn_cost(ALEXNET)
+        ch = RadioChannel()
+        devs = make_devices(6)
+        pl = LLHRPlanner(ch, position_steps=60)
+        plan, problems = pl.plan(mc, devs, [0, 1, 2, 3])
+        victim = plan.placements[0].assign[0]
+        plan2, _ = pl.replan_on_failure(plan, problems, dead=victim)
+        assert plan2.feasible
+        # the dead device hosts nothing afterwards (delegation happened)
+        for sol in plan2.placements:
+            assert all(i < 5 for i in sol.assign)
