@@ -1,0 +1,89 @@
+"""Benchmark: batched scenario engine vs. a Python loop over LLHRPlanner.
+
+Plans B mobility-jittered scenarios of an AlexNet swarm two ways:
+
+* scalar  — one ``LLHRPlanner.plan`` call per scenario (``solve_chain_dp``
+            placement, positions supplied, as the serve loop would do today);
+* batched — one ``ScenarioEngine.plan_batch`` call over all B scenarios.
+
+Reports scenarios/sec for both, the speedup, and the elementwise agreement
+of the batched latencies with the scalar oracle (max relative difference).
+
+Usage:  PYTHONPATH=src python benchmarks/bench_scenario_engine.py [--batch 256]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs.alexnet import ALEXNET
+from repro.core import (LLHRPlanner, RadioChannel, cnn_cost, make_devices,
+                        solve_chain_dp)
+from repro.core.positions import hex_init
+from repro.runtime.scenario_engine import ScenarioEngine, ScenarioGenerator
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--uavs", type=int, default=8)
+    ap.add_argument("--scalar-sample", type=int, default=64,
+                    help="scenarios to actually time on the scalar path "
+                         "(extrapolated; the full loop is the point)")
+    args = ap.parse_args()
+
+    ch = RadioChannel()
+    mc = cnn_cost(ALEXNET)
+    devs = make_devices(args.uavs)
+    base = hex_init(args.uavs, 40.0)
+    gen = ScenarioGenerator(base, pos_sigma_m=2.0, seed=0)
+    batch = gen.draw(args.batch)
+
+    # --- batched engine (includes one-time jit compile, reported apart) ----
+    engine = ScenarioEngine(ch, devs, mc)
+    t0 = time.perf_counter()
+    plan = engine.plan_batch(batch)
+    compile_and_run = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    plan = engine.plan_batch(batch)
+    batched_s = time.perf_counter() - t0
+    batched_rate = args.batch / batched_s
+
+    # --- scalar oracle loop ------------------------------------------------
+    planner = LLHRPlanner(ch, placement_solver=solve_chain_dp,
+                          optimize_positions=False)
+    n_sample = min(args.scalar_sample, args.batch)
+    lat_scalar = np.empty(n_sample)
+    t0 = time.perf_counter()
+    for n in range(n_sample):
+        p, _ = planner.plan(mc, devs, [int(batch.source[n])],
+                            positions=batch.positions[n])
+        lat_scalar[n] = p.total_latency
+    scalar_s = (time.perf_counter() - t0) * args.batch / n_sample
+    scalar_rate = args.batch / scalar_s
+
+    # --- agreement ---------------------------------------------------------
+    both = np.isfinite(lat_scalar) & np.isfinite(plan.latency[:n_sample])
+    rel = np.abs(plan.latency[:n_sample][both] - lat_scalar[both]) \
+        / np.maximum(lat_scalar[both], 1e-12)
+    max_rel = float(rel.max()) if rel.size else 0.0
+
+    print(f"uavs={args.uavs} layers={mc.layers.__len__()} "
+          f"batch={args.batch}")
+    print(f"batched : {batched_rate:10.1f} scenarios/s "
+          f"({batched_s * 1e3:.1f} ms/batch; first call incl. jit "
+          f"{compile_and_run * 1e3:.0f} ms)")
+    print(f"scalar  : {scalar_rate:10.1f} scenarios/s "
+          f"(extrapolated from {n_sample} solves)")
+    print(f"speedup : {batched_rate / scalar_rate:10.1f}x")
+    print(f"max relative latency diff vs oracle: {max_rel:.2e} "
+          f"({int(both.sum())}/{n_sample} feasible compared)")
+    assert max_rel < 1e-5, "batched engine diverged from the scalar oracle"
+    assert batched_rate / scalar_rate >= 10.0, "speedup target (10x) missed"
+    print("PASS: >=10x and oracle match within 1e-5")
+
+
+if __name__ == "__main__":
+    main()

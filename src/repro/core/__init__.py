@@ -6,6 +6,9 @@ from repro.core.placement import (Device, PlacementProblem,
                                   PlacementSolution, solve_bnb, solve_brute,
                                   solve_chain_dp, solve_chain_dp_minmax,
                                   solve_greedy, solve_random)
+from repro.core.batch import (BatchPowerSolution, pairwise_dist_batched,
+                              power_threshold_batched, rate_matrix_batched,
+                              solve_chain_dp_batched, solve_power_batched)
 from repro.core.planner import LLHRPlanner, Plan
 from repro.core.power import PowerSolution, solve_power
 from repro.core.positions import (chain_oracle, hex_init, solve_positions,
@@ -26,4 +29,6 @@ __all__ = [
     "HeuristicPlanner", "RandomPlanner", "SwarmSim", "average_latency",
     "average_power", "make_devices", "StagePlan", "pipeline_efficiency",
     "plan_pipeline", "stage_devices",
+    "BatchPowerSolution", "pairwise_dist_batched", "power_threshold_batched",
+    "rate_matrix_batched", "solve_chain_dp_batched", "solve_power_batched",
 ]

@@ -1,0 +1,266 @@
+"""Batched LLHR planning primitives — the NumPy oracles lifted to a leading
+scenario axis in pure ``jnp``.
+
+Everything here mirrors an existing scalar implementation elementwise:
+
+* ``power_threshold_batched`` / ``solve_power_batched``   <-> ``power.solve_power``
+  (closed-form P1, eq. 6-7)
+* ``rate_matrix_batched``                                 <-> ``PowerSolution.rate_matrix``
+  (eq. 5 at the solved powers, zeroed on infeasible links)
+* ``solve_chain_dp_batched``                              <-> ``placement.solve_chain_dp``
+  (contiguous-block chain DP, P3 fast path)
+
+The scalar NumPy versions stay the reference oracles; the batched paths are
+tested elementwise against them (``tests/test_batch_engine.py``) and power the
+fleet-scale scenario engine in ``repro.runtime.scenario_engine``.  All
+functions are pure, ``vmap``/``jit``-compatible, and take an optional
+
+* ``active``      [B,U]   bool — False marks a failed UAV: zero power, no
+                          links, and the chain DP refuses to host layers on it
+                          (the paper's delegation semantics, batched);
+* ``gain_scale``  [B,U,U] multiplicative channel-gain factor (log-normal
+                          shadowing draws from the scenario generator).
+
+Shapes use B = scenarios, U = UAVs, L = layers.  Computation runs in JAX's
+default float32; the oracle tests compare at 1e-5 relative tolerance.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import RadioParams
+
+
+# ---------------------------------------------------------------------------
+# Geometry + channel (eq. 4, 5, 7), batched
+# ---------------------------------------------------------------------------
+
+
+def pairwise_dist_batched(positions: jnp.ndarray) -> jnp.ndarray:
+    """[..., U, 2] positions -> [..., U, U] Euclidean distances."""
+    diff = positions[..., :, None, :] - positions[..., None, :, :]
+    return jnp.sqrt((diff ** 2).sum(-1))
+
+
+def link_gain_batched(dist: jnp.ndarray, params: RadioParams,
+                      gain_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """eq. (4) with the same d0 = 1 m clamp as ``RadioChannel.gain``."""
+    d = jnp.maximum(dist, 1.0)
+    g = params.h0 / d ** 2
+    if gain_scale is not None:
+        g = g * gain_scale
+    return g
+
+
+def power_threshold_batched(dist: jnp.ndarray, params: RadioParams,
+                            bits: Optional[float] = None,
+                            gain_scale: Optional[jnp.ndarray] = None
+                            ) -> jnp.ndarray:
+    """eq. (7): minimum power delivering ``bits`` within tau, per link."""
+    bits = params.packet_bits if bits is None else bits
+    spectral = bits * math.log(2.0) / (params.bandwidth_hz * params.tau)
+    gain = link_gain_batched(dist, params, gain_scale)
+    return params.noise_watts / gain * (math.exp(spectral) - 1.0)
+
+
+@dataclass(frozen=True)
+class BatchPowerSolution:
+    """Batched twin of ``power.PowerSolution`` (arrays gain a leading B)."""
+
+    power: jnp.ndarray          # [B, U]
+    threshold: jnp.ndarray      # [B, U]
+    feasible: jnp.ndarray       # [B, U] bool
+    link_feasible: jnp.ndarray  # [B, U, U] bool
+    total_power: jnp.ndarray    # [B]
+
+
+def solve_power_batched(dist: jnp.ndarray, params: RadioParams,
+                        links: Optional[jnp.ndarray] = None,
+                        active: Optional[jnp.ndarray] = None,
+                        gain_scale: Optional[jnp.ndarray] = None,
+                        threshold_matrix: Optional[jnp.ndarray] = None
+                        ) -> BatchPowerSolution:
+    """Closed-form P1 (eq. 6-7) over a scenario batch; mirrors
+    ``power.solve_power`` elementwise on each scenario's (sub)swarm.
+
+    A failed UAV (``active`` False) binds no link and transmits at zero power,
+    exactly as if it were deleted from the scalar problem.  Pass
+    ``threshold_matrix`` (a prior ``power_threshold_batched`` result for the
+    same dist/gain_scale) to skip recomputing eq. (7).
+    """
+    U = dist.shape[-1]
+    p_max = params.p_max_watts
+    eye = jnp.eye(U, dtype=bool)
+    if threshold_matrix is None:
+        threshold_matrix = power_threshold_batched(dist, params,
+                                                   gain_scale=gain_scale)
+    th = jnp.where(eye, 0.0, threshold_matrix)
+    link_feasible = th <= p_max                      # diag: th=0 -> True
+    if active is not None:
+        pair = active[..., :, None] & active[..., None, :]
+        link_feasible = link_feasible & (pair | eye)
+    use = link_feasible if links is None else (links & link_feasible)
+    threshold = jnp.where(use & ~eye, th, 0.0).max(-1)
+    power = jnp.minimum(threshold, p_max)
+    feasible = threshold <= p_max
+    if active is not None:
+        power = jnp.where(active, power, 0.0)
+        threshold = jnp.where(active, threshold, 0.0)
+    return BatchPowerSolution(power=power, threshold=threshold,
+                              feasible=feasible, link_feasible=link_feasible,
+                              total_power=power.sum(-1))
+
+
+def rate_matrix_batched(dist: jnp.ndarray, power: jnp.ndarray,
+                        params: RadioParams, link_feasible: jnp.ndarray,
+                        gain_scale: Optional[jnp.ndarray] = None
+                        ) -> jnp.ndarray:
+    """eq. (5) at the solved powers: rho_{i,k} [B,U,U]; 0 on infeasible
+    links, inf on the diagonal (self-transfer is free)."""
+    U = dist.shape[-1]
+    p_rx = link_gain_batched(dist, params, gain_scale) * power[..., :, None]
+    rate = params.bandwidth_hz * jnp.log2(1.0 + p_rx / params.noise_watts)
+    rate = jnp.where(link_feasible, rate, 0.0)
+    return jnp.where(jnp.eye(U, dtype=bool), jnp.inf, rate)
+
+
+# ---------------------------------------------------------------------------
+# Batched contiguous-block chain DP (P3 fast path)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("order",))
+def _chain_dp_tables(compute: jnp.ndarray, memory: jnp.ndarray,
+                     act_bits: jnp.ndarray, input_bits: jnp.ndarray,
+                     mem_cap: jnp.ndarray, compute_cap: jnp.ndarray,
+                     throughput: jnp.ndarray, rate: jnp.ndarray,
+                     source: jnp.ndarray, active: jnp.ndarray,
+                     order: Tuple[int, ...]):
+    """DP tables for ``solve_chain_dp`` over a batch.
+
+    dp[b][s] = best cost of placing layers [0..b) with layer b-1 on device
+    order[s-1]; candidates scan block starts a and predecessor states s0
+    vectorized over the batch.  Tie-breaking matches the scalar solver's
+    loop order (a outer, s0 inner, strict improvement) via first-argmin.
+    """
+    L = compute.shape[0]
+    S = len(order)
+    B = rate.shape[0]
+    pre_c = jnp.concatenate([jnp.zeros(1), jnp.cumsum(compute)])
+    pre_m = jnp.concatenate([jnp.zeros(1), jnp.cumsum(memory)])
+    batch_ix = jnp.arange(B)
+
+    dp = [[jnp.full((B,), jnp.inf) for _ in range(S + 1)]
+          for _ in range(L + 1)]
+    dp[0][0] = jnp.zeros((B,))
+    zero_par = jnp.zeros((B,), dtype=jnp.int32)
+    par_a = [[zero_par for _ in range(S + 1)] for _ in range(L + 1)]
+    par_s0 = [[zero_par for _ in range(S + 1)] for _ in range(L + 1)]
+
+    for b in range(1, L + 1):
+        a_ix = jnp.arange(b)
+        # bits entering a block that starts at layer a (eq. 12 / eq. 14)
+        bits_in = jnp.where(a_ix == 0, input_bits,
+                            act_bits[jnp.maximum(a_ix - 1, 0)])      # [b]
+        for s in range(1, S + 1):
+            dev = order[s - 1]
+            blk_m = pre_m[b] - pre_m[:b]                             # [b]
+            blk_c = pre_c[b] - pre_c[:b]
+            ok = ((blk_m <= mem_cap[dev] + 1e-9) &
+                  (blk_c <= compute_cap[dev] + 1e-9))
+            ct = blk_c / throughput[dev]
+            # transfer into the block from state (a, s0): source when a == 0
+            # (dp[0][s0>0] is inf, so only s0 = 0 survives), else from
+            # order[s0-1].  rate diag is inf -> same-device transfer is 0.
+            prev = jnp.array([order[s0 - 1] if s0 >= 1 else 0
+                              for s0 in range(s)], dtype=jnp.int32)  # [s]
+            r_prev = rate[:, prev, dev]                              # [B, s]
+            tr = jnp.where(r_prev[:, None, :] > 0,
+                           bits_in[None, :, None] / r_prev[:, None, :],
+                           jnp.inf)                                  # [B, b, s]
+            r_src = rate[batch_ix, source, dev]                      # [B]
+            tr_src = jnp.where(r_src > 0, input_bits / r_src, jnp.inf)
+            tr = tr.at[:, 0, :].set(tr_src[:, None])
+            dp_prev = jnp.stack(
+                [jnp.stack([dp[a][s0] for s0 in range(s)], -1)
+                 for a in range(b)], 1)                              # [B, b, s]
+            cand = dp_prev + tr + ct[None, :, None]
+            cand = jnp.where(ok[None, :, None], cand, jnp.inf)
+            cand = jnp.where(active[:, dev, None, None], cand, jnp.inf)
+            flat = cand.reshape(B, -1)                  # index = a * s + s0
+            arg = jnp.argmin(flat, -1).astype(jnp.int32)
+            dp[b][s] = flat.min(-1)
+            par_a[b][s] = arg // s
+            par_s0[b][s] = arg % s
+    dp_final = jnp.stack([dp[L][s] for s in range(S + 1)], -1)       # [B, S+1]
+    s_best = jnp.argmin(dp_final, -1).astype(jnp.int32)
+    latency = dp_final.min(-1)
+    pa = jnp.stack([jnp.stack(row, -1) for row in par_a], -1)  # [B, S+1, L+1]
+    ps = jnp.stack([jnp.stack(row, -1) for row in par_s0], -1)
+    return latency, s_best, pa, ps
+
+
+def solve_chain_dp_batched(compute: np.ndarray, memory: np.ndarray,
+                           act_bits: np.ndarray, input_bits: float,
+                           mem_cap: np.ndarray, compute_cap: np.ndarray,
+                           throughput: np.ndarray, rate: np.ndarray,
+                           source: np.ndarray,
+                           active: Optional[np.ndarray] = None,
+                           device_order: Optional[Sequence[int]] = None
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched mirror of ``placement.solve_chain_dp``.
+
+    Args: per-layer ``compute``/``memory``/``act_bits`` [L] shared across the
+    batch; device caps/throughput [U]; ``rate`` [B,U,U] (inf diagonal, 0 =
+    infeasible link); ``source`` [B] capturing-UAV index; ``active`` [B,U].
+
+    Returns ``(assign, latency)``: assign [B, L] device ids (-1 everywhere on
+    infeasible scenarios), latency [B] (inf when infeasible).
+    """
+    B, U = rate.shape[0], rate.shape[-1]
+    order = tuple(device_order) if device_order is not None else \
+        tuple(range(U))
+    if active is None:
+        active = jnp.ones((B, U), dtype=bool)
+    latency, s_best, pa, ps = _chain_dp_tables(
+        jnp.asarray(compute, jnp.float32), jnp.asarray(memory, jnp.float32),
+        jnp.asarray(act_bits, jnp.float32), jnp.float32(input_bits),
+        jnp.asarray(mem_cap, jnp.float32),
+        jnp.asarray(compute_cap, jnp.float32),
+        jnp.asarray(throughput, jnp.float32), jnp.asarray(rate, jnp.float32),
+        jnp.asarray(source, jnp.int32), jnp.asarray(active), order)
+    return (_reconstruct_assignments(np.asarray(latency), np.asarray(s_best),
+                                     np.asarray(pa), np.asarray(ps),
+                                     order, len(compute)),
+            np.asarray(latency, dtype=np.float64))
+
+
+def _reconstruct_assignments(latency: np.ndarray, s_best: np.ndarray,
+                             pa: np.ndarray, ps: np.ndarray,
+                             order: Tuple[int, ...], L: int) -> np.ndarray:
+    """Walk the parent pointers back to per-layer device ids (host side)."""
+    B = latency.shape[0]
+    assign = np.full((B, L), -1, dtype=np.int64)
+    for n in range(B):
+        if not np.isfinite(latency[n]):
+            continue
+        b, s = L, int(s_best[n])
+        while b > 0 and s > 0:
+            a, s0 = int(pa[n, s, b]), int(ps[n, s, b])
+            assign[n, a:b] = order[s - 1]
+            b, s = a, s0
+    return assign
+
+
+__all__ = [
+    "BatchPowerSolution", "pairwise_dist_batched", "link_gain_batched",
+    "power_threshold_batched", "solve_power_batched", "rate_matrix_batched",
+    "solve_chain_dp_batched",
+]

@@ -87,27 +87,42 @@ class FaultTolerantRunner:
     def __init__(self, devices: Sequence[Device],
                  replan_fn: Callable[[Sequence[Device]], object],
                  ckpt_dir: str,
-                 straggler_demote: float = 0.5):
+                 straggler_demote: float = 0.5,
+                 contingency: Optional[object] = None):
         self.state = ElasticPlanState(list(devices))
         self.replan_fn = replan_fn
         self.ckpt_dir = ckpt_dir
         self.demote = straggler_demote
+        # optional precomputed failure plans (scenario_engine.ContingencyTable
+        # or anything with ``lookup(dead_names) -> plan | None``): delegation
+        # becomes a table lookup instead of a re-solve at failure time
+        self.contingency = contingency
         self.health = HealthTracker([d.name for d in devices])
         self.state.plan = replan_fn(self.state.devices)
         self.events: List[Dict] = []
 
     # ------------------------------------------------------------------
     def on_failure(self, dead_names: Sequence[str]) -> object:
-        """Delegation: drop dead devices, re-solve placement."""
+        """Delegation: drop dead devices, re-solve placement — or switch to
+        the precomputed contingency plan when the batched engine already
+        solved this failure scenario up front.  A contingency hit installs a
+        ``ContingencyPlan`` already normalized to the survivor index space,
+        so its ``assign`` addresses the shrunk ``state.devices`` list exactly
+        like a live ``replan_fn`` result would."""
         survivors = [d for d in self.state.devices
                      if d.name not in set(dead_names)]
         if not survivors:
             raise RuntimeError("no surviving devices")
         self.state.devices = survivors
-        self.state.plan = self.replan_fn(survivors)
+        plan = self.contingency.lookup(dead_names) if self.contingency \
+            else None
+        precomputed = plan is not None
+        self.state.plan = plan if precomputed else self.replan_fn(survivors)
+        self.contingency = None    # table assumed the full swarm; now stale
         self.state.generation += 1
         self.events.append({"kind": "failure", "dead": list(dead_names),
-                            "generation": self.state.generation})
+                            "generation": self.state.generation,
+                            "precomputed": precomputed})
         return self.state.plan
 
     def on_straggler(self, slow_names: Sequence[str]) -> object:
@@ -121,6 +136,7 @@ class FaultTolerantRunner:
                 new_devs.append(d)
         self.state.devices = new_devs
         self.state.plan = self.replan_fn(new_devs)
+        self.contingency = None    # table assumed pre-demotion throughputs
         self.state.generation += 1
         self.events.append({"kind": "straggler", "slow": list(slow_names),
                             "generation": self.state.generation})

@@ -1,0 +1,376 @@
+"""Fleet-scale scenario engine: plan hundreds of LLHR swarm scenarios in one
+batched call.
+
+The paper re-optimizes P1 -> P2 -> P3 "periodically to support the dynamics
+of the system over time".  At fleet scale that means evaluating the planner
+over a whole ensemble of what-if scenarios every period — mobility jitter,
+UAV failures, shadowing draws — exactly how the related work (Dhuheir et al.,
+arXiv:2212.11201; Jouhari et al., arXiv:2105.11013) evaluates swarm
+placement.  This module provides:
+
+* ``ScenarioGenerator`` — Monte-Carlo draws around a nominal swarm state:
+  Gaussian position jitter (mobility), i.i.d. UAV failures, log-normal
+  shadowing on the channel gain, and a random capturing UAV per scenario.
+* ``ScenarioEngine``    — one jit-compiled pipeline running the batched P1
+  closed form, the eq. (5) rate matrix, and the batched chain-DP placement
+  (``repro.core.batch``) over the whole scenario axis at once.
+* ``ContingencyTable``  — every single-UAV-failure plan precomputed in one
+  engine call, so the fault-tolerance runner can delegate instantly instead
+  of re-solving at failure time.
+
+The scalar planner (``LLHRPlanner`` with ``solve_chain_dp``) remains the
+per-scenario oracle; ``benchmarks/bench_scenario_engine.py`` measures the
+batched speedup and verifies the outputs agree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batch import (pairwise_dist_batched, power_threshold_batched,
+                              rate_matrix_batched, solve_chain_dp_batched,
+                              solve_power_batched)
+from repro.core.channel import RadioChannel, RadioParams
+from repro.core.cost_model import ModelCost
+from repro.core.placement import Device
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo scenario generation
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ScenarioBatch:
+    """A batch of B swarm scenarios (the engine's input)."""
+
+    positions: np.ndarray                  # [B, U, 2] UAV positions (m)
+    source: np.ndarray                     # [B] capturing UAV per scenario
+    active: Optional[np.ndarray] = None    # [B, U] bool; False = failed UAV
+    gain_scale: Optional[np.ndarray] = None  # [B, U, U] shadowing factor
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.positions.shape[0]
+
+    @property
+    def n_uavs(self) -> int:
+        return self.positions.shape[1]
+
+
+@dataclass
+class ScenarioGenerator:
+    """Monte-Carlo draws around a nominal swarm state.
+
+    Knobs (all default to "off" so the generator degrades to tiling the
+    nominal state):
+
+    * ``pos_sigma_m``     — std-dev of per-axis Gaussian mobility jitter.
+    * ``failure_prob``    — i.i.d. probability each UAV has failed; at least
+                            one UAV always survives, and the scenario source
+                            is always drawn among survivors.
+    * ``shadow_sigma_db`` — std-dev (dB) of symmetric log-normal shadowing
+                            applied multiplicatively to the link gain.
+    """
+
+    base_positions: np.ndarray
+    pos_sigma_m: float = 0.0
+    failure_prob: float = 0.0
+    shadow_sigma_db: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.base_positions = np.asarray(self.base_positions, np.float64)
+        self._rng = np.random.default_rng(self.seed)
+
+    def draw(self, n_scenarios: int) -> ScenarioBatch:
+        rng = self._rng
+        U = self.base_positions.shape[0]
+        pos = np.broadcast_to(self.base_positions,
+                              (n_scenarios, U, 2)).copy()
+        if self.pos_sigma_m > 0:
+            pos += rng.normal(scale=self.pos_sigma_m, size=pos.shape)
+        active = None
+        if self.failure_prob > 0:
+            active = rng.random((n_scenarios, U)) >= self.failure_prob
+            none_alive = ~active.any(axis=1)
+            active[none_alive, 0] = True       # at least one survivor
+        gain_scale = None
+        if self.shadow_sigma_db > 0:
+            # draw once per unordered pair and mirror (reciprocity), so every
+            # off-diagonal entry keeps the full shadow_sigma_db std-dev
+            sh_db = rng.normal(scale=self.shadow_sigma_db,
+                               size=(n_scenarios, U, U))
+            upper = np.triu(sh_db, k=1)
+            sh_db = upper + np.swapaxes(upper, 1, 2)
+            gain_scale = 10.0 ** (sh_db / 10.0)
+            eye = np.eye(U, dtype=bool)
+            gain_scale[:, eye] = 1.0
+        if active is None:
+            source = rng.integers(0, U, size=n_scenarios)
+        else:                                   # source among survivors
+            source = np.array([rng.choice(np.flatnonzero(a))
+                               for a in active])
+        return ScenarioBatch(positions=pos, source=source, active=active,
+                             gain_scale=gain_scale)
+
+    def failure_sweep(self, source: int = 0) -> ScenarioBatch:
+        """One scenario per single-UAV failure (plus the no-failure nominal
+        scenario at index U) at the nominal positions — the contingency set.
+
+        ``source`` is the capturing UAV; the scenario that kills it uses the
+        next surviving UAV as source instead."""
+        U = self.base_positions.shape[0]
+        pos = np.broadcast_to(self.base_positions, (U + 1, U, 2)).copy()
+        active = np.ones((U + 1, U), dtype=bool)
+        active[np.arange(U), np.arange(U)] = False
+        src = np.array([(source + 1) % U if k == source else source
+                        for k in range(U)] + [source])
+        return ScenarioBatch(positions=pos, source=src, active=active)
+
+
+# ---------------------------------------------------------------------------
+# Batched planning engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchPlan:
+    """Plans for a batch of scenarios (batched twin of ``planner.Plan``).
+
+    As in the scalar planner, ``rate`` (and hence ``latency``) comes from the
+    all-feasible-links P1 solve, while ``power``/``total_power`` are the P1
+    optimum tightened to the links each placement actually uses (a UAV that
+    transmits to nobody needs zero power — ``min_power_for_placement``)."""
+
+    scenarios: ScenarioBatch
+    power: np.ndarray          # [B, U] transmit powers on used links (W)
+    rate: np.ndarray           # [B, U, U] rho at the sizing powers (bits/s)
+    assign: np.ndarray         # [B, L] device id per layer (-1 = infeasible)
+    latency: np.ndarray        # [B] end-to-end latency (s; inf = infeasible)
+    total_power: np.ndarray    # [B]
+
+    @property
+    def feasible(self) -> np.ndarray:
+        return np.isfinite(self.latency)
+
+    @property
+    def n_feasible(self) -> int:
+        return int(self.feasible.sum())
+
+    def best(self) -> int:
+        """Index of the lowest-latency feasible scenario."""
+        if not self.feasible.any():
+            raise ValueError("no feasible scenario in this batch")
+        return int(np.argmin(self.latency))
+
+    def latency_percentile(self, q: float) -> float:
+        """Latency percentile across the WHOLE ensemble, infeasible scenarios
+        included as inf — an SLO statistic must see outages: if the q-th
+        order statistic falls in the infeasible tail the result is inf, not
+        a silently optimistic number over the survivors.  (np.percentile
+        alone would interpolate with inf and return NaN.)"""
+        if not self.latency.size:
+            return float("inf")
+        lat = np.sort(self.latency)
+        pos = q / 100.0 * (lat.size - 1)
+        lo = int(np.floor(pos))
+        frac = pos - lo
+        if frac == 0.0:                      # lands exactly on an element
+            return float(lat[lo])
+        if not np.isfinite(lat[lo + 1]):     # interpolating into the outage tail
+            return float("inf")
+        return float(lat[lo] + frac * (lat[lo + 1] - lat[lo]))
+
+
+class ScenarioEngine:
+    """Vectorized LLHR fast path: batched P1 + eq. (5) + chain-DP placement.
+
+    One instance is specialized to a (channel, devices, model) triple; the
+    power/rate pipeline is jit-compiled once and reused across every
+    ``plan_batch`` call of the same batch size (XLA caches per shape).
+    """
+
+    def __init__(self, channel: RadioChannel | RadioParams,
+                 devices: Sequence[Device], model: ModelCost,
+                 device_order: Optional[Sequence[int]] = None,
+                 act_scale: float = 1.0):
+        self.params = channel.params if isinstance(channel, RadioChannel) \
+            else channel
+        self.devices = list(devices)
+        self.model = model
+        self.order = tuple(device_order) if device_order is not None else \
+            tuple(range(len(self.devices)))
+        self.compute = np.array([l.flops for l in model.layers])
+        self.memory = np.array([l.weight_bytes for l in model.layers])
+        self.act_bits = np.array([l.act_bits for l in model.layers]) * act_scale
+        self.input_bits = float(model.input_bits)
+        self.mem_cap = np.array([d.mem_cap for d in self.devices])
+        self.compute_cap = np.array([d.compute_cap for d in self.devices])
+        self.throughput = np.array([d.throughput for d in self.devices])
+        self._radio = jax.jit(partial(_solve_radio, params=self.params))
+        self._tighten = jax.jit(partial(_tighten_power, params=self.params))
+
+    # ------------------------------------------------------------------
+    def plan_batch(self, scenarios: ScenarioBatch) -> BatchPlan:
+        """Solve P1 + P3 for every scenario in one batched call."""
+        B_, U = scenarios.n_scenarios, scenarios.n_uavs
+        active = scenarios.active if scenarios.active is not None else \
+            np.ones((B_, U), dtype=bool)
+        gain = scenarios.gain_scale
+        active_j = jnp.asarray(active)
+        power, rate, dist, th = self._radio(
+            jnp.asarray(scenarios.positions, jnp.float32), active_j,
+            None if gain is None else jnp.asarray(gain, jnp.float32))
+        assign, latency = solve_chain_dp_batched(
+            self.compute, self.memory, self.act_bits, self.input_bits,
+            self.mem_cap, self.compute_cap, self.throughput,
+            rate, scenarios.source, active=active,
+            device_order=self.order)
+        # tighten P1 to the links each placement actually uses (the scalar
+        # planner's min_power_for_placement step, batched); dist and the
+        # eq. (7) thresholds are reused from the first solve
+        links = _used_links_mask(assign, scenarios.source, U)
+        power = np.asarray(
+            self._tighten(dist, th, jnp.asarray(links), active_j), np.float64)
+        return BatchPlan(scenarios=scenarios, power=power,
+                         rate=np.asarray(rate, np.float64), assign=assign,
+                         latency=latency, total_power=power.sum(-1))
+
+    def plan_positions(self, positions: np.ndarray,
+                       source: int = 0) -> BatchPlan:
+        """Convenience: plan a single scenario (adds/strips the batch axis)."""
+        batch = ScenarioBatch(positions=np.asarray(positions)[None],
+                              source=np.array([source]))
+        return self.plan_batch(batch)
+
+
+def _solve_radio(positions: jnp.ndarray, active: jnp.ndarray,
+                 gain_scale: Optional[jnp.ndarray], *, params: RadioParams):
+    """Jit-compiled P1 + rate pipeline (positions -> powers -> rho).
+
+    Also returns the distances and eq. (7) threshold matrix so the
+    used-links tighten pass doesn't recompute them."""
+    dist = pairwise_dist_batched(positions)
+    th = power_threshold_batched(dist, params, gain_scale=gain_scale)
+    pw = solve_power_batched(dist, params, active=active,
+                             gain_scale=gain_scale, threshold_matrix=th)
+    rate = rate_matrix_batched(dist, pw.power, params, pw.link_feasible,
+                               gain_scale=gain_scale)
+    return pw.power, rate, dist, th
+
+
+def _tighten_power(dist: jnp.ndarray, threshold_matrix: jnp.ndarray,
+                   links: jnp.ndarray, active: jnp.ndarray,
+                   *, params: RadioParams) -> jnp.ndarray:
+    """P1 restricted to the links a placement uses (min_power_for_placement
+    batched): powers sized only for the transfers that actually happen."""
+    return solve_power_batched(dist, params, links=links, active=active,
+                               threshold_matrix=threshold_matrix).power
+
+
+def _used_links_mask(assign: np.ndarray, source: np.ndarray,
+                     n_uavs: int) -> np.ndarray:
+    """[B,U,U] bool mask of the inter-UAV transfers each placement performs
+    (source -> first layer's device, then every device change along the
+    chain).  Infeasible scenarios (assign -1) use no links."""
+    B, L = assign.shape
+    links = np.zeros((B, n_uavs, n_uavs), dtype=bool)
+    rows = np.arange(B)
+    first = assign[:, 0]
+    m = (first >= 0) & (source != first)
+    links[rows[m], source[m], first[m]] = True
+    for j in range(L - 1):
+        a, b = assign[:, j], assign[:, j + 1]
+        m = (a >= 0) & (b >= 0) & (a != b)
+        links[rows[m], a[m], b[m]] = True
+    return links
+
+
+# ---------------------------------------------------------------------------
+# Precomputed failure contingencies (delegation without a re-solve)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ContingencyPlan:
+    """The delegation plan to apply when ``dead`` has failed."""
+
+    dead: Optional[str]        # device name, or None for the nominal plan
+    dead_index: int            # index into the ORIGINAL device list (-1)
+    assign: Tuple[int, ...]    # device ids into the ORIGINAL device list
+    latency: float
+    power: np.ndarray          # [U] over the ORIGINAL devices (0 for dead)
+
+    @property
+    def survivor_assign(self) -> Tuple[int, ...]:
+        """The assignment re-indexed into the survivor device list — the
+        index space ``FaultTolerantRunner.state.devices`` uses after the
+        dead device is dropped (ids above it shift down by one)."""
+        if self.dead_index < 0:
+            return self.assign
+        return tuple(i - 1 if i > self.dead_index else i
+                     for i in self.assign)
+
+    def as_survivor_plan(self) -> "ContingencyPlan":
+        """Normalize to survivor index space: assign re-indexed and power
+        sliced to the shrunk device list, so the installed plan addresses
+        devices the same way a live ``replan_fn`` result would."""
+        if self.dead_index < 0:
+            return self
+        return ContingencyPlan(
+            dead=self.dead, dead_index=-1, assign=self.survivor_assign,
+            latency=self.latency,
+            power=np.delete(self.power, self.dead_index))
+
+
+class ContingencyTable:
+    """All single-failure delegation plans, computed in one batched call.
+
+    The paper's delegation ("it will delegate this subtask to another UAV")
+    is a re-solve at failure time; at fleet scale the engine instead plans
+    the whole failure sweep up front, so ``FaultTolerantRunner`` can switch
+    plans the moment a heartbeat lapses.
+    """
+
+    def __init__(self, engine: ScenarioEngine, positions: np.ndarray,
+                 source: int = 0):
+        self.engine = engine
+        sweep = ScenarioGenerator(positions).failure_sweep(source=source)
+        U = positions.shape[0]
+        plan = engine.plan_batch(sweep)
+        names = [d.name for d in engine.devices]
+        self.plans: Dict[Optional[str], ContingencyPlan] = {}
+        for k in range(U):
+            self.plans[names[k]] = ContingencyPlan(
+                dead=names[k], dead_index=k,
+                assign=tuple(int(x) for x in plan.assign[k]),
+                latency=float(plan.latency[k]), power=plan.power[k])
+        self.plans[None] = ContingencyPlan(
+            dead=None, dead_index=-1,
+            assign=tuple(int(x) for x in plan.assign[U]),
+            latency=float(plan.latency[U]), power=plan.power[U])
+
+    def lookup(self, dead_names: Sequence[str]
+               ) -> Optional[ContingencyPlan]:
+        """Precomputed plan for a single failure, normalized to the SURVIVOR
+        index space (the device list the caller keeps after dropping the
+        dead UAV); None for multi-failures (those fall back to a live
+        re-solve) or unknown devices."""
+        if len(dead_names) != 1:
+            return None
+        plan = self.plans.get(dead_names[0])
+        if plan is None or not np.isfinite(plan.latency):
+            return None
+        return plan.as_survivor_plan()
+
+
+__all__ = [
+    "ScenarioBatch", "ScenarioGenerator", "BatchPlan", "ScenarioEngine",
+    "ContingencyPlan", "ContingencyTable",
+]

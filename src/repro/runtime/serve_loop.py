@@ -2,6 +2,11 @@
 and a continuous batcher that keeps decode slots full (vLLM-style at the
 scheduling level; the KV layout itself is the dense per-slot cache the
 models define — TPU-friendly static shapes).
+
+``PeriodicReplanner`` hooks the batched LLHR scenario engine into the serve
+loop: the paper's periodic re-optimization is amortized by planning a whole
+Monte-Carlo scenario batch in one call per period, so in-flight request
+batches keep serving off the cached plan between refreshes.
 """
 from __future__ import annotations
 
@@ -129,3 +134,76 @@ class ContinuousBatcher:
             self.active = still
             max_steps -= 1
         return done
+
+
+# ---------------------------------------------------------------------------
+# Periodic swarm re-optimization (amortized over in-flight batches)
+# ---------------------------------------------------------------------------
+
+
+class PeriodicReplanner:
+    """Amortized LLHR re-optimization for a serving loop.
+
+    The paper re-runs P1->P3 "periodically to support the dynamics of the
+    system"; a fleet cannot afford a scalar re-solve per request.  Instead,
+    every ``period`` ticks this wrapper makes ONE batched engine call over
+    ``n_scenarios`` Monte-Carlo draws (mobility jitter, failures, shadowing)
+    with the measured swarm state as scenario 0.  Between refreshes, every
+    in-flight request batch serves off the cached nominal placement, and the
+    scenario ensemble prices the robustness of that plan (p95 latency).
+
+    ``engine``/``generator`` come from ``repro.runtime.scenario_engine``.
+    """
+
+    def __init__(self, engine, generator, period: int = 10,
+                 n_scenarios: int = 128, source: int = 0):
+        self.engine = engine
+        self.generator = generator
+        self.period = max(1, period)
+        self.n_scenarios = n_scenarios
+        self.source = source
+        self.plan = None           # BatchPlan of the last refresh
+        self.refreshes = 0
+
+    # ------------------------------------------------------------------
+    def tick(self, frame: int,
+             positions: Optional[np.ndarray] = None) -> bool:
+        """Advance one serving tick; refresh the plan ensemble on period
+        boundaries (and on the first tick).  ``positions``: newly measured
+        UAV positions (updates the generator's nominal state).  Returns
+        True when a refresh happened."""
+        if positions is not None:
+            self.generator.base_positions = np.asarray(positions, np.float64)
+        if self.plan is not None and frame % self.period != 0:
+            return False
+        batch = self.generator.draw(self.n_scenarios)
+        # scenario 0 is pinned to the measured (nominal) swarm state: its
+        # placement is the one requests are actually served with
+        batch.positions[0] = self.generator.base_positions
+        if batch.active is not None:
+            batch.active[0] = True
+        if batch.gain_scale is not None:
+            batch.gain_scale[0] = 1.0
+        batch.source[0] = self.source
+        self.plan = self.engine.plan_batch(batch)
+        self.refreshes += 1
+        return True
+
+    # ------------------------------------------------------------------
+    @property
+    def assignment(self) -> Optional[np.ndarray]:
+        """Layer -> device placement currently being served (scenario 0)."""
+        if self.plan is None:
+            return None
+        return self.plan.assign[0]
+
+    @property
+    def nominal_latency(self) -> float:
+        return float(self.plan.latency[0]) if self.plan is not None \
+            else float("inf")
+
+    def robust_latency(self, q: float = 95.0) -> float:
+        """Latency percentile across the scenario ensemble — what the plan
+        costs under the modelled dynamics, not just at the nominal state."""
+        return self.plan.latency_percentile(q) if self.plan is not None \
+            else float("inf")

@@ -1,0 +1,322 @@
+"""Batched scenario engine vs. the scalar NumPy oracles.
+
+Every batched primitive in ``repro.core.batch`` must agree elementwise with
+its per-scenario scalar reference (``power.solve_power``,
+``PowerSolution.rate_matrix``, ``placement.solve_chain_dp``) across
+randomized scenario batches — including failed-UAV and infeasible-link
+cases — and the runtime wiring (engine, generator, contingency table,
+periodic replanner, fault-tolerance lookup) must behave.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.lenet import LENET
+from repro.core import (Device, LLHRPlanner, PlacementProblem, RadioChannel,
+                        RadioParams, cnn_cost, make_devices,
+                        solve_chain_dp, solve_chain_dp_batched,
+                        solve_power, solve_power_batched)
+from repro.core.batch import (pairwise_dist_batched, power_threshold_batched,
+                              rate_matrix_batched)
+from repro.core.positions import hex_init
+from repro.runtime.scenario_engine import (ContingencyTable, ScenarioEngine,
+                                           ScenarioGenerator)
+from repro.runtime.serve_loop import PeriodicReplanner
+
+RTOL = 1e-5
+PARAMS = RadioParams()
+CH = RadioChannel(PARAMS)
+
+
+def random_batch(n_scenarios, n_uavs, seed=0, spread=120.0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, spread, (n_scenarios, n_uavs, 2))
+    dist = np.sqrt(((pos[:, :, None] - pos[:, None, :]) ** 2).sum(-1))
+    return pos, dist, rng
+
+
+def lenet_arrays():
+    mc = cnn_cost(LENET)
+    compute = np.array([l.flops for l in mc.layers])
+    memory = np.array([l.weight_bytes for l in mc.layers])
+    act = np.array([l.act_bits for l in mc.layers])
+    return mc, compute, memory, act
+
+
+# ---------------------------------------------------------------------------
+# P1 closed form + rate matrix vs. the scalar oracle
+# ---------------------------------------------------------------------------
+
+
+class TestBatchedPower:
+    def test_threshold_matches_channel(self):
+        _, dist, _ = random_batch(8, 5, seed=1)
+        th_b = np.asarray(power_threshold_batched(dist, PARAMS))
+        for n in range(8):
+            np.testing.assert_allclose(th_b[n], CH.power_threshold(dist[n]),
+                                       rtol=RTOL)
+
+    def test_power_matches_oracle_elementwise(self):
+        # spread=120 m mixes comfortably-feasible and infeasible links
+        for seed, spread in ((0, 120.0), (1, 60.0), (2, 400.0)):
+            _, dist, _ = random_batch(16, 6, seed=seed, spread=spread)
+            sol_b = solve_power_batched(dist, PARAMS)
+            for n in range(16):
+                sol = solve_power(dist[n], CH)
+                np.testing.assert_allclose(np.asarray(sol_b.power)[n],
+                                           sol.power, rtol=RTOL, atol=1e-12)
+                np.testing.assert_array_equal(
+                    np.asarray(sol_b.link_feasible)[n], sol.link_feasible)
+                np.testing.assert_array_equal(np.asarray(sol_b.feasible)[n],
+                                              sol.feasible)
+
+    def test_rate_matrix_matches_oracle(self):
+        _, dist, _ = random_batch(8, 6, seed=3, spread=200.0)
+        sol_b = solve_power_batched(dist, PARAMS)
+        rate_b = np.asarray(rate_matrix_batched(
+            dist, sol_b.power, PARAMS, sol_b.link_feasible))
+        for n in range(8):
+            rate = solve_power(dist[n], CH).rate_matrix(CH, dist[n])
+            fin = np.isfinite(rate)
+            np.testing.assert_array_equal(fin, np.isfinite(rate_b[n]))
+            np.testing.assert_allclose(rate_b[n][fin], rate[fin], rtol=RTOL)
+
+    def test_failed_uav_matches_survivor_subproblem(self):
+        """A dead UAV must be exactly a deletion from the scalar problem."""
+        _, dist, _ = random_batch(8, 6, seed=4)
+        active = np.ones((8, 6), dtype=bool)
+        dead = [n % 6 for n in range(8)]
+        active[np.arange(8), dead] = False
+        sol_b = solve_power_batched(dist, PARAMS, active=active)
+        for n in range(8):
+            alive = np.flatnonzero(active[n])
+            sub = solve_power(dist[n][np.ix_(alive, alive)], CH)
+            np.testing.assert_allclose(np.asarray(sol_b.power)[n][alive],
+                                       sub.power, rtol=RTOL, atol=1e-12)
+            assert np.asarray(sol_b.power)[n][dead[n]] == 0.0
+
+    def test_pairwise_dist(self):
+        pos, dist, _ = random_batch(4, 5, seed=5)
+        np.testing.assert_allclose(np.asarray(pairwise_dist_batched(pos)),
+                                   dist, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Batched chain DP vs. placement.solve_chain_dp
+# ---------------------------------------------------------------------------
+
+
+class TestBatchedChainDP:
+    def _solve_both(self, n_scenarios, n_uavs, seed, spread=120.0,
+                    mem_frac=1.0):
+        _, dist, rng = random_batch(n_scenarios, n_uavs, seed=seed,
+                                    spread=spread)
+        mc, compute, memory, act = lenet_arrays()
+        devs = make_devices(n_uavs, mem_frac=mem_frac)
+        sol_b = solve_power_batched(dist, PARAMS)
+        rate = np.asarray(rate_matrix_batched(dist, sol_b.power, PARAMS,
+                                              sol_b.link_feasible))
+        src = rng.integers(0, n_uavs, n_scenarios)
+        assign_b, lat_b = solve_chain_dp_batched(
+            compute, memory, act, mc.input_bits,
+            np.array([d.mem_cap for d in devs]),
+            np.array([d.compute_cap for d in devs]),
+            np.array([d.throughput for d in devs]), rate, src)
+        scalars = []
+        for n in range(n_scenarios):
+            p = PlacementProblem(compute, memory, act, devs,
+                                 solve_power(dist[n], CH)
+                                 .rate_matrix(CH, dist[n]),
+                                 source=int(src[n]),
+                                 input_bits=mc.input_bits)
+            scalars.append((p, solve_chain_dp(p)))
+        return assign_b, lat_b, scalars
+
+    def test_matches_oracle_randomized(self):
+        for seed in range(3):
+            assign_b, lat_b, scalars = self._solve_both(12, 5, seed)
+            for n, (p, sol) in enumerate(scalars):
+                assert np.isfinite(lat_b[n]) == np.isfinite(sol.latency)
+                if not np.isfinite(sol.latency):
+                    continue
+                np.testing.assert_allclose(lat_b[n], sol.latency, rtol=RTOL)
+                # the batched assignment must be feasible and cost the same
+                assert p.feasible(assign_b[n])
+                np.testing.assert_allclose(p.latency(assign_b[n]),
+                                           sol.latency, rtol=RTOL)
+
+    def test_infeasible_links_give_infinite_latency(self):
+        """Scenarios spread so wide no link closes: both paths report inf
+        (a single UAV can still serve its own request, so force tiny mem)."""
+        assign_b, lat_b, scalars = self._solve_both(
+            6, 4, seed=7, spread=5000.0, mem_frac=1e-4)
+        assert not np.isfinite(lat_b).any()
+        for n, (_, sol) in enumerate(scalars):
+            assert not np.isfinite(sol.latency)
+            assert (assign_b[n] == -1).all()
+
+    def test_failed_uav_matches_survivor_subproblem(self):
+        n_scenarios, n_uavs = 6, 5
+        _, dist, rng = random_batch(n_scenarios, n_uavs, seed=8)
+        mc, compute, memory, act = lenet_arrays()
+        devs = make_devices(n_uavs)
+        active = np.ones((n_scenarios, n_uavs), dtype=bool)
+        dead = [n % n_uavs for n in range(n_scenarios)]
+        active[np.arange(n_scenarios), dead] = False
+        src = np.array([(d + 1) % n_uavs for d in dead])
+        sol_b = solve_power_batched(dist, PARAMS, active=active)
+        rate = np.asarray(rate_matrix_batched(dist, sol_b.power, PARAMS,
+                                              sol_b.link_feasible))
+        assign_b, lat_b = solve_chain_dp_batched(
+            compute, memory, act, mc.input_bits,
+            np.array([d.mem_cap for d in devs]),
+            np.array([d.compute_cap for d in devs]),
+            np.array([d.throughput for d in devs]), rate, src, active=active)
+        for n in range(n_scenarios):
+            alive = np.flatnonzero(active[n])
+            sub_devs = [devs[i] for i in alive]
+            sub_rate = solve_power(dist[n][np.ix_(alive, alive)], CH) \
+                .rate_matrix(CH, dist[n][np.ix_(alive, alive)])
+            sub_src = int(np.where(alive == src[n])[0][0])
+            p = PlacementProblem(compute, memory, act, sub_devs, sub_rate,
+                                 source=sub_src, input_bits=mc.input_bits)
+            sol = solve_chain_dp(p)
+            assert dead[n] not in assign_b[n]
+            if np.isfinite(sol.latency):
+                np.testing.assert_allclose(lat_b[n], sol.latency, rtol=RTOL)
+            else:
+                assert not np.isfinite(lat_b[n])
+
+
+# ---------------------------------------------------------------------------
+# Scenario generator + engine + runtime wiring
+# ---------------------------------------------------------------------------
+
+
+class TestScenarioEngine:
+    def _engine(self, n_uavs=5):
+        mc = cnn_cost(LENET)
+        devs = make_devices(n_uavs)
+        return ScenarioEngine(CH, devs, mc), hex_init(n_uavs, 40.0), devs, mc
+
+    def test_generator_shapes_and_determinism(self):
+        base = hex_init(5, 40.0)
+        gen = ScenarioGenerator(base, pos_sigma_m=2.0, failure_prob=0.3,
+                                shadow_sigma_db=3.0, seed=42)
+        b = gen.draw(16)
+        assert b.positions.shape == (16, 5, 2)
+        assert b.active.shape == (16, 5) and b.active.any(axis=1).all()
+        assert b.gain_scale.shape == (16, 5, 5)
+        np.testing.assert_allclose(b.gain_scale,
+                                   np.swapaxes(b.gain_scale, 1, 2))
+        np.testing.assert_allclose(b.gain_scale[:, np.eye(5, dtype=bool)],
+                                   1.0)
+        # the source is always a survivor
+        assert b.active[np.arange(16), b.source].all()
+        b2 = ScenarioGenerator(base, pos_sigma_m=2.0, failure_prob=0.3,
+                               shadow_sigma_db=3.0, seed=42).draw(16)
+        np.testing.assert_array_equal(b.positions, b2.positions)
+        np.testing.assert_array_equal(b.source, b2.source)
+
+    def test_engine_matches_llhr_planner(self):
+        engine, base, devs, mc = self._engine()
+        gen = ScenarioGenerator(base, pos_sigma_m=2.0, seed=0)
+        batch = gen.draw(8)
+        plan = engine.plan_batch(batch)
+        planner = LLHRPlanner(CH, placement_solver=solve_chain_dp,
+                              optimize_positions=False)
+        for n in range(8):
+            p, _ = planner.plan(mc, devs, [int(batch.source[n])],
+                                positions=batch.positions[n])
+            np.testing.assert_allclose(plan.latency[n], p.total_latency,
+                                       rtol=RTOL)
+            # total_power mirrors the scalar planner's used-links tightening
+            np.testing.assert_allclose(plan.total_power[n], p.total_power,
+                                       rtol=RTOL, atol=1e-12)
+
+    def test_contingency_table_excludes_dead(self):
+        engine, base, devs, _ = self._engine()
+        table = ContingencyTable(engine, base, source=0)
+        for k, d in enumerate(devs):
+            cp = table.plans[d.name]
+            if np.isfinite(cp.latency):
+                assert k not in cp.assign
+                assert cp.power[k] == 0.0
+                # survivor_assign re-indexes into the shrunk device list
+                survivors = [i for i in range(len(devs)) if i != k]
+                assert cp.survivor_assign == tuple(
+                    survivors.index(i) for i in cp.assign)
+        assert table.plans[None].survivor_assign == table.plans[None].assign
+        assert table.lookup(["uav1", "uav2"]) is None   # multi-failure
+        assert table.lookup(["nope"]) is None
+
+    def test_latency_percentile_sees_outages(self):
+        from repro.runtime.scenario_engine import BatchPlan, ScenarioBatch
+        lat = np.array([0.001, 0.002, 0.003, np.inf])
+        dummy = ScenarioBatch(positions=np.zeros((4, 2, 2)),
+                              source=np.zeros(4, dtype=int))
+        plan = BatchPlan(scenarios=dummy, power=np.zeros((4, 2)),
+                         rate=np.zeros((4, 2, 2)),
+                         assign=np.zeros((4, 3), dtype=int), latency=lat,
+                         total_power=np.zeros(4))
+        # q inside the feasible mass interpolates finitely; q in the outage
+        # tail is inf; nothing is ever NaN
+        assert np.isclose(plan.latency_percentile(50), 0.0025)
+        assert plan.latency_percentile(95) == float("inf")
+        # exactly on the last finite element: finite, no 0*inf NaN
+        assert np.isclose(plan.latency_percentile(200.0 / 3.0), 0.003)
+        all_inf = BatchPlan(scenarios=dummy, power=np.zeros((4, 2)),
+                            rate=np.zeros((4, 2, 2)),
+                            assign=np.full((4, 3), -1),
+                            latency=np.full(4, np.inf),
+                            total_power=np.zeros(4))
+        assert all_inf.latency_percentile(50) == float("inf")
+
+    def test_periodic_replanner_refresh_cadence(self):
+        engine, base, _, _ = self._engine()
+        gen = ScenarioGenerator(base, pos_sigma_m=1.0, seed=0)
+        rp = PeriodicReplanner(engine, gen, period=4, n_scenarios=8)
+        refreshed = [rp.tick(f) for f in range(9)]
+        assert refreshed == [True, False, False, False,
+                             True, False, False, False, True]
+        assert rp.refreshes == 3
+        assert rp.assignment is not None
+        assert np.isfinite(rp.nominal_latency)
+        assert rp.robust_latency(95) >= rp.nominal_latency - 1e-12
+
+    def test_fault_tolerant_runner_uses_contingency(self, tmp_path):
+        engine, base, devs, _ = self._engine()
+        from repro.runtime.fault_tolerance import FaultTolerantRunner
+        table = ContingencyTable(engine, base, source=0)
+        calls = []
+
+        def replan(devices):
+            calls.append(len(devices))
+            return ("replanned", len(devices))
+
+        runner = FaultTolerantRunner(devs, replan, str(tmp_path),
+                                     contingency=table)
+        assert calls == [len(devs)]          # initial plan is a live solve
+        plan = runner.on_failure(["uav2"])
+        assert calls == [len(devs)]          # no re-solve: table hit
+        assert plan.dead == "uav2"
+        assert runner.events[-1]["precomputed"] is True
+        # the installed plan is normalized to the survivor index space
+        assert plan.assign == plan.survivor_assign
+        assert all(0 <= i < len(runner.state.devices) for i in plan.assign)
+        assert len(plan.power) == len(runner.state.devices)
+        # second failure: table is stale, falls back to a live re-solve
+        runner.on_failure(["uav1"])
+        assert calls == [len(devs), len(devs) - 2]
+        assert runner.events[-1]["precomputed"] is False
+
+    def test_straggler_demotion_invalidates_contingency(self, tmp_path):
+        engine, base, devs, _ = self._engine()
+        from repro.runtime.fault_tolerance import FaultTolerantRunner
+        table = ContingencyTable(engine, base, source=0)
+        runner = FaultTolerantRunner(devs, lambda d: len(d), str(tmp_path),
+                                     contingency=table)
+        runner.on_straggler(["uav1"])
+        # the table assumed pre-demotion throughputs: must not be consulted
+        assert runner.contingency is None
+        runner.on_failure(["uav2"])
+        assert runner.events[-1]["precomputed"] is False
