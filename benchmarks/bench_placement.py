@@ -1,0 +1,233 @@
+"""Benchmark: scan-based batched chain DP vs the PR 1 unrolled tracer vs the
+NumPy oracle.
+
+Three ways to place a batch of B scenarios (L-layer chain, U UAVs):
+
+* fast    — ``solve_chain_dp_batched``: lax.scan wavefront DP + device-side
+            backtrack, ONE jit call for solve + plan extraction;
+* legacy  — ``solve_chain_dp_batched_unrolled``: the PR 1 Python-unrolled
+            tracer (O(L*S) stacked ops) + per-scenario host backtrack;
+* oracle  — ``placement.solve_chain_dp``, one NumPy solve per scenario
+            (timed on a sample, extrapolated to B).
+
+Reported per path: first-call wall-clock (jit compile + solve + plan
+extraction — the latency a replanning tick actually pays the first time a
+shape is seen) and steady-state wall-clock (cached executable).  The
+acceptance target is the END-TO-END first-call speedup of fast over legacy,
+plus a "big" case (default U = L = 32) that the legacy tracer cannot
+compile in reasonable time and the fast path handles in seconds.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_placement.py
+        [--batch 256] [--uavs 8] [--layers 12] [--smoke]
+        [--skip-legacy] [--json BENCH_placement.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+
+from repro.core import (PlacementProblem, RadioChannel, RadioParams,
+                        make_devices, solve_chain_dp, solve_chain_dp_batched,
+                        solve_power, solve_power_batched)
+from repro.core.batch import (rate_matrix_batched,
+                              solve_chain_dp_batched_unrolled)
+
+PARAMS = RadioParams()
+CH = RadioChannel(PARAMS)
+
+
+def synthetic_chain(n_layers: int, seed: int = 0):
+    """An AlexNet-shaped L-layer CNN chain: front-loaded compute, a heavy
+    fully-connected tail in memory, shrinking activations."""
+    rng = np.random.default_rng(seed)
+    compute = np.abs(rng.normal(7e7, 3e7, n_layers)) + 1e6       # MACs
+    memory = np.abs(rng.normal(2e6, 1e6, n_layers)) + 1e4        # bytes
+    act_bits = np.abs(rng.normal(6e5, 3e5, n_layers)) + 1e4      # bits
+    return compute, memory, act_bits, 1.0e6                      # + K_s
+
+
+def build_case(batch: int, uavs: int, layers: int, seed: int = 0,
+               spread: float = 150.0):
+    """-> (dp_args tuple, devices, per-scenario rate/source for the oracle)."""
+    rng = np.random.default_rng(seed)
+    compute, memory, act_bits, input_bits = synthetic_chain(layers, seed)
+    devs = make_devices(uavs)
+    pos = rng.uniform(0, spread, (batch, uavs, 2))
+    dist = np.sqrt(((pos[:, :, None] - pos[:, None, :]) ** 2).sum(-1))
+    sol = solve_power_batched(dist, PARAMS)
+    rate = np.asarray(rate_matrix_batched(dist, sol.power, PARAMS,
+                                          sol.link_feasible))
+    source = rng.integers(0, uavs, batch)
+    args = (compute, memory, act_bits, input_bits,
+            np.array([d.mem_cap for d in devs]),
+            np.array([d.compute_cap for d in devs]),
+            np.array([d.throughput for d in devs]), rate, source)
+    return args, devs, dist
+
+
+def _time_batched(fn, args, repeats: int):
+    """-> ({first-call, steady-state, throughput}, assign, latency)."""
+    t0 = time.perf_counter()
+    assign, latency = fn(*args)
+    first = time.perf_counter() - t0
+    steady = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        assign, latency = fn(*args)
+        steady.append(time.perf_counter() - t0)
+    batch = args[7].shape[0]
+    steady_s = float(np.median(steady))
+    return {"first_call_s": first, "steady_s": steady_s,
+            "scenarios_per_s": batch / steady_s}, assign, latency
+
+
+def _time_oracle(args, devs, sample: int):
+    compute, memory, act_bits, input_bits = args[0], args[1], args[2], args[3]
+    rate, source = args[7], args[8]
+    n = min(sample, rate.shape[0])
+    lat = np.empty(n)
+    assigns = []
+    t0 = time.perf_counter()
+    for i in range(n):
+        p = PlacementProblem(compute, memory, act_bits, list(devs),
+                             rate[i], source=int(source[i]),
+                             input_bits=input_bits)
+        sol = solve_chain_dp(p)
+        lat[i] = sol.latency
+        assigns.append(sol.assign)
+    per_scenario = (time.perf_counter() - t0) / n
+    return {"per_scenario_s": per_scenario,
+            "scenarios_per_s": 1.0 / per_scenario,
+            "sampled": n}, lat, assigns
+
+
+def run(batch: int = 256, uavs: int = 8, layers: int = 12,
+        big_batch: int = 64, big_uavs: int = 32, big_layers: int = 32,
+        repeats: int = 5, sample: int = 64, skip_legacy: bool = False,
+        smoke: bool = False) -> Dict:
+    args, devs, dist = build_case(batch, uavs, layers)
+    result: Dict = {
+        "benchmark": "placement_chain_dp",
+        "backend": jax.default_backend(),
+        "config": {"batch": batch, "uavs": uavs, "layers": layers,
+                   "repeats": repeats, "smoke": smoke},
+    }
+
+    fast, assign_f, lat_f = _time_batched(solve_chain_dp_batched, args,
+                                          repeats)
+    result["fast"] = fast
+    print(f"fast    : first {fast['first_call_s']:7.2f}s   "
+          f"steady {fast['steady_s'] * 1e3:8.1f} ms  "
+          f"({fast['scenarios_per_s']:9.1f} scen/s)")
+
+    if not skip_legacy:
+        legacy, assign_l, lat_l = _time_batched(
+            solve_chain_dp_batched_unrolled, args, repeats)
+        result["legacy_unrolled"] = legacy
+        print(f"legacy  : first {legacy['first_call_s']:7.2f}s   "
+              f"steady {legacy['steady_s'] * 1e3:8.1f} ms  "
+              f"({legacy['scenarios_per_s']:9.1f} scen/s)")
+        result["speedup"] = {
+            "end_to_end_vs_legacy":
+                legacy["first_call_s"] / fast["first_call_s"],
+            "steady_vs_legacy": legacy["steady_s"] / fast["steady_s"],
+        }
+        result["agreement_vs_legacy"] = {
+            "assignments_equal": bool(np.array_equal(assign_f, assign_l)),
+            "latencies_equal": bool(np.allclose(lat_f, lat_l, rtol=1e-6,
+                                                equal_nan=True)),
+        }
+        print(f"speedup : {result['speedup']['end_to_end_vs_legacy']:.1f}x "
+              f"end-to-end (compile+solve+extract), "
+              f"{result['speedup']['steady_vs_legacy']:.2f}x steady-state")
+
+    oracle, lat_o, assigns_o = _time_oracle(args, devs, sample)
+    result["oracle_numpy"] = oracle
+    result["speedup"] = result.get("speedup", {})
+    result["speedup"]["steady_vs_oracle"] = (
+        fast["scenarios_per_s"] * oracle["per_scenario_s"])
+    both = np.isfinite(lat_o) & np.isfinite(lat_f[:oracle["sampled"]])
+    rel = (np.abs(lat_f[:oracle["sampled"]][both] - lat_o[both])
+           / np.maximum(lat_o[both], 1e-12))
+    assign_eq = all(
+        (not np.isfinite(lat_o[i])) or tuple(assign_f[i]) == assigns_o[i]
+        for i in range(oracle["sampled"]))
+    result["agreement_vs_oracle"] = {
+        "max_rel_latency_diff": float(rel.max()) if rel.size else 0.0,
+        "assignments_equal": bool(assign_eq),
+        "compared": int(both.sum()),
+    }
+    print(f"oracle  : {oracle['scenarios_per_s']:9.1f} scen/s "
+          f"(sampled {oracle['sampled']}); fast is "
+          f"{result['speedup']['steady_vs_oracle']:.1f}x; max rel latency "
+          f"diff {result['agreement_vs_oracle']['max_rel_latency_diff']:.2e};"
+          f" assignments equal: {assign_eq}")
+
+    # the case the unrolled tracer could not compile at all
+    big_args, _, _ = build_case(big_batch, big_uavs, big_layers, seed=1,
+                                spread=250.0)
+    big, _, big_lat = _time_batched(solve_chain_dp_batched, big_args,
+                                    max(1, repeats // 2))
+    result["big_case"] = {"batch": big_batch, "uavs": big_uavs,
+                         "layers": big_layers, **big,
+                         "n_feasible": int(np.isfinite(big_lat).sum())}
+    print(f"big     : U={big_uavs} L={big_layers} B={big_batch}: first "
+          f"{big['first_call_s']:.2f}s (trace+compile+solve), steady "
+          f"{big['steady_s'] * 1e3:.1f} ms — intractable for the unrolled "
+          f"tracer")
+
+    assert result["agreement_vs_oracle"]["max_rel_latency_diff"] < 1e-5, \
+        "scan DP diverged from the NumPy oracle"
+    assert result["agreement_vs_oracle"]["assignments_equal"], \
+        "scan DP backtracked different assignments than the oracle"
+    if not skip_legacy:
+        assert result["agreement_vs_legacy"]["assignments_equal"], \
+            "scan DP diverged from the PR 1 tracer's assignments"
+    if not (smoke or skip_legacy):
+        assert result["speedup"]["end_to_end_vs_legacy"] >= 5.0, \
+            "end-to-end speedup target (5x vs PR 1) missed"
+        print("PASS: >=5x end-to-end vs the PR 1 tracer, oracle match <=1e-5")
+    return result
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--uavs", type=int, default=8)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--sample", type=int, default=64,
+                    help="scenarios solved on the NumPy-oracle path")
+    ap.add_argument("--skip-legacy", action="store_true",
+                    help="skip the slow-to-compile PR 1 baseline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run; no speedup asserts")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the result dict to this path")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cfg = dict(batch=min(args.batch, 16), uavs=min(args.uavs, 4),
+                   layers=min(args.layers, 6), big_batch=4, big_uavs=16,
+                   big_layers=16, repeats=2, sample=8, smoke=True,
+                   skip_legacy=args.skip_legacy)
+    else:
+        cfg = dict(batch=args.batch, uavs=args.uavs, layers=args.layers,
+                   repeats=args.repeats, sample=args.sample,
+                   skip_legacy=args.skip_legacy)
+    result = run(**cfg)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -4,19 +4,29 @@ Plans B mobility-jittered scenarios of an AlexNet swarm two ways:
 
 * scalar  — one ``LLHRPlanner.plan`` call per scenario (``solve_chain_dp``
             placement, positions supplied, as the serve loop would do today);
-* batched — one ``ScenarioEngine.plan_batch`` call over all B scenarios.
+* batched — one ``ScenarioEngine.plan_batch`` call over all B scenarios
+            (fused P1 + rates + scan chain-DP, compiled once per signature
+            through the process-wide plan cache).
 
-Reports scenarios/sec for both, the speedup, and the elementwise agreement
-of the batched latencies with the scalar oracle (max relative difference).
+Reports scenarios/sec for both, the speedup, the elementwise agreement of
+the batched latencies with the scalar oracle (max relative difference), and
+the plan-cache behavior: the first call compiles, every later call — and
+every later ``PeriodicReplanner`` frame — must re-execute with ZERO
+retraces.
 
-Usage:  PYTHONPATH=src python benchmarks/bench_scenario_engine.py [--batch 256]
+Usage:  PYTHONPATH=src python benchmarks/bench_scenario_engine.py
+            [--batch 256] [--smoke] [--json BENCH_scenario_engine.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import Dict
 
 import numpy as np
+
+import jax
 
 from repro.configs.alexnet import ALEXNET
 from repro.core import (LLHRPlanner, RadioChannel, cnn_cost, make_devices,
@@ -25,44 +35,47 @@ from repro.core.positions import hex_init
 from repro.runtime.scenario_engine import ScenarioEngine, ScenarioGenerator
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=256)
-    ap.add_argument("--uavs", type=int, default=8)
-    ap.add_argument("--scalar-sample", type=int, default=64,
-                    help="scenarios to actually time on the scalar path "
-                         "(extrapolated; the full loop is the point)")
-    args = ap.parse_args()
-
+def run(batch: int = 256, uavs: int = 8, scalar_sample: int = 64,
+        frames: int = 8, smoke: bool = False) -> Dict:
     ch = RadioChannel()
     mc = cnn_cost(ALEXNET)
-    devs = make_devices(args.uavs)
-    base = hex_init(args.uavs, 40.0)
+    devs = make_devices(uavs)
+    base = hex_init(uavs, 40.0)
     gen = ScenarioGenerator(base, pos_sigma_m=2.0, seed=0)
-    batch = gen.draw(args.batch)
+    batch_scen = gen.draw(batch)
 
-    # --- batched engine (includes one-time jit compile, reported apart) ----
+    # --- batched engine (one-time jit compile reported apart) --------------
     engine = ScenarioEngine(ch, devs, mc)
     t0 = time.perf_counter()
-    plan = engine.plan_batch(batch)
+    plan = engine.plan_batch(batch_scen)
     compile_and_run = time.perf_counter() - t0
+    traces_after_first = engine.trace_count
     t0 = time.perf_counter()
-    plan = engine.plan_batch(batch)
+    plan = engine.plan_batch(batch_scen)
     batched_s = time.perf_counter() - t0
-    batched_rate = args.batch / batched_s
+    batched_rate = batch / batched_s
+
+    # --- steady frames: replanner cadence must never retrace ---------------
+    frame_s = []
+    for f in range(frames):
+        scen = gen.draw(batch)
+        t0 = time.perf_counter()
+        engine.plan_batch(scen)
+        frame_s.append(time.perf_counter() - t0)
+    retraces = engine.trace_count - traces_after_first
 
     # --- scalar oracle loop ------------------------------------------------
     planner = LLHRPlanner(ch, placement_solver=solve_chain_dp,
                           optimize_positions=False)
-    n_sample = min(args.scalar_sample, args.batch)
+    n_sample = min(scalar_sample, batch)
     lat_scalar = np.empty(n_sample)
     t0 = time.perf_counter()
     for n in range(n_sample):
-        p, _ = planner.plan(mc, devs, [int(batch.source[n])],
-                            positions=batch.positions[n])
+        p, _ = planner.plan(mc, devs, [int(batch_scen.source[n])],
+                            positions=batch_scen.positions[n])
         lat_scalar[n] = p.total_latency
-    scalar_s = (time.perf_counter() - t0) * args.batch / n_sample
-    scalar_rate = args.batch / scalar_s
+    scalar_s = (time.perf_counter() - t0) * batch / n_sample
+    scalar_rate = batch / scalar_s
 
     # --- agreement ---------------------------------------------------------
     both = np.isfinite(lat_scalar) & np.isfinite(plan.latency[:n_sample])
@@ -70,19 +83,70 @@ def main() -> None:
         / np.maximum(lat_scalar[both], 1e-12)
     max_rel = float(rel.max()) if rel.size else 0.0
 
-    print(f"uavs={args.uavs} layers={mc.layers.__len__()} "
-          f"batch={args.batch}")
+    result = {
+        "benchmark": "scenario_engine",
+        "backend": jax.default_backend(),
+        "config": {"batch": batch, "uavs": uavs, "layers": len(mc.layers),
+                   "scalar_sample": n_sample, "frames": frames,
+                   "smoke": smoke},
+        "batched": {"first_call_s": compile_and_run, "steady_s": batched_s,
+                    "scenarios_per_s": batched_rate,
+                    "frame_median_s": float(np.median(frame_s))},
+        "scalar": {"scenarios_per_s": scalar_rate,
+                   "per_scenario_s": scalar_s / batch},
+        "speedup_vs_scalar": batched_rate / scalar_rate,
+        "plan_cache": {"traces_first_call": traces_after_first,
+                       "retraces_after_first": retraces,
+                       **engine.plan_cache_info()},
+        "agreement": {"max_rel_latency_diff": max_rel,
+                      "compared": int(both.sum())},
+    }
+
+    print(f"uavs={uavs} layers={len(mc.layers)} batch={batch}")
     print(f"batched : {batched_rate:10.1f} scenarios/s "
           f"({batched_s * 1e3:.1f} ms/batch; first call incl. jit "
           f"{compile_and_run * 1e3:.0f} ms)")
     print(f"scalar  : {scalar_rate:10.1f} scenarios/s "
           f"(extrapolated from {n_sample} solves)")
     print(f"speedup : {batched_rate / scalar_rate:10.1f}x")
+    print(f"cache   : {traces_after_first} traces on the first call, "
+          f"{retraces} retraces over {frames} later frames")
     print(f"max relative latency diff vs oracle: {max_rel:.2e} "
           f"({int(both.sum())}/{n_sample} feasible compared)")
     assert max_rel < 1e-5, "batched engine diverged from the scalar oracle"
-    assert batched_rate / scalar_rate >= 10.0, "speedup target (10x) missed"
-    print("PASS: >=10x and oracle match within 1e-5")
+    assert retraces == 0, "plan cache failed: engine retraced across frames"
+    if not smoke:
+        assert batched_rate / scalar_rate >= 10.0, \
+            "speedup target (10x) missed"
+        print("PASS: >=10x, 0 retraces, and oracle match within 1e-5")
+    return result
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--uavs", type=int, default=8)
+    ap.add_argument("--scalar-sample", type=int, default=64,
+                    help="scenarios to actually time on the scalar path "
+                         "(extrapolated; the full loop is the point)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run; no speedup asserts")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the result dict to this path")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cfg = dict(batch=min(args.batch, 16), uavs=min(args.uavs, 4),
+                   scalar_sample=min(args.scalar_sample, 8), frames=3,
+                   smoke=True)
+    else:
+        cfg = dict(batch=args.batch, uavs=args.uavs,
+                   scalar_sample=args.scalar_sample)
+    result = run(**cfg)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return result
 
 
 if __name__ == "__main__":

@@ -1,15 +1,33 @@
-"""Benchmark harness — one module per paper figure + kernel microbench.
+"""Benchmark harness — paper figures (CSV) + perf-trajectory JSON.
 
-Prints ``name,us_per_call,derived`` CSV.  The dry-run/roofline benchmark
-(reports/dryrun) is driven separately by scripts/run_dryrun_all.sh since
-it needs a 512-device process.
+Modes:
+
+* (default)        — one module per paper figure + kernel microbench,
+                     printing ``name,us_per_call,derived`` CSV.
+* ``--bench``      — the perf pipeline: runs ``bench_placement`` and
+                     ``bench_scenario_engine`` at full size and writes
+                     ``BENCH_placement.json`` / ``BENCH_scenario_engine.json``
+                     (wall-clock, compile time, speedups vs the NumPy
+                     oracle and the PR 1 tracer) into ``--out``.
+* ``--smoke``      — same pipeline at tiny B/U/L (CI-sized, CPU-friendly);
+                     agreement and zero-retrace asserts stay on, speedup
+                     asserts are skipped.
+
+The dry-run/roofline benchmark (reports/dryrun) is driven separately by
+scripts/run_dryrun_all.sh since it needs a 512-device process.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 
+# allow `python benchmarks/run.py` from the repo root (sys.path[0] is then
+# benchmarks/, not the root that holds the package)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-def main() -> None:
+
+def run_figures() -> None:
     from benchmarks import (bench_kernels, fig2_latency_power,
                             fig3_latency_memory, fig4_min_power,
                             fig5_request_scaling)
@@ -17,6 +35,32 @@ def main() -> None:
     for mod in (fig2_latency_power, fig3_latency_memory, fig4_min_power,
                 fig5_request_scaling, bench_kernels):
         mod.main()
+
+
+def run_bench(out_dir: str, smoke: bool) -> None:
+    from benchmarks import bench_placement, bench_scenario_engine
+    os.makedirs(out_dir, exist_ok=True)
+    flags = ["--smoke"] if smoke else []
+    bench_placement.main(
+        flags + ["--json", os.path.join(out_dir, "BENCH_placement.json")])
+    bench_scenario_engine.main(
+        flags + ["--json",
+                 os.path.join(out_dir, "BENCH_scenario_engine.json")])
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", action="store_true",
+                    help="run the perf pipeline, write BENCH_*.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="perf pipeline at tiny CI sizes (implies --bench)")
+    ap.add_argument("--out", type=str, default="benchmarks",
+                    help="directory for BENCH_*.json artifacts")
+    args = ap.parse_args(argv)
+    if args.bench or args.smoke:
+        run_bench(args.out, smoke=args.smoke)
+    else:
+        run_figures()
 
 
 if __name__ == "__main__":

@@ -134,16 +134,146 @@ def rate_matrix_batched(dist: jnp.ndarray, power: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # Batched contiguous-block chain DP (P3 fast path)
 # ---------------------------------------------------------------------------
+#
+# Two implementations share the same recurrence (``placement.solve_chain_dp``
+# batched):
+#
+# * ``_chain_dp_solve``           — lax.scan wavefront over layers with dense
+#                                   [L, B, S+1] parent pointers and a reverse
+#                                   lax.scan backtrack, all in ONE jit call.
+#                                   O(1) traced ops per layer, so U, L >= 32
+#                                   compiles in seconds.  This is the default.
+# * ``_chain_dp_tables_unrolled`` — the PR 1 Python-unrolled tracer (O(L*S)
+#                                   stacked ops + a host-side backtrack loop).
+#                                   Kept verbatim as the benchmark baseline
+#                                   (``benchmarks/bench_placement.py``) and as
+#                                   a second parity oracle in the tests.
 
 
 @partial(jax.jit, static_argnames=("order",))
-def _chain_dp_tables(compute: jnp.ndarray, memory: jnp.ndarray,
-                     act_bits: jnp.ndarray, input_bits: jnp.ndarray,
-                     mem_cap: jnp.ndarray, compute_cap: jnp.ndarray,
-                     throughput: jnp.ndarray, rate: jnp.ndarray,
-                     source: jnp.ndarray, active: jnp.ndarray,
-                     order: Tuple[int, ...]):
-    """DP tables for ``solve_chain_dp`` over a batch.
+def _chain_dp_solve(compute: jnp.ndarray, memory: jnp.ndarray,
+                    act_bits: jnp.ndarray, input_bits: jnp.ndarray,
+                    mem_cap: jnp.ndarray, compute_cap: jnp.ndarray,
+                    throughput: jnp.ndarray, rate: jnp.ndarray,
+                    source: jnp.ndarray, active: jnp.ndarray,
+                    order: Tuple[int, ...]):
+    """Scan-based chain DP: solve + backtrack fully on device.
+
+    Forward pass: one ``lax.scan`` step per layer count b carries the dense
+    dp table [B, L+1, S+1] (dp[b][s] = best cost of placing layers [0..b)
+    with layer b-1 on device order[s-1]) and relaxes ALL (block-start a,
+    predecessor-state s0, device-state s) candidates as a single masked
+    min-reduction over a [B, L, S+1, S] tensor.  Tie-breaking matches the
+    scalar solver's loop order (a outer, s0 inner, strict improvement) via
+    first-argmin over the flattened (a, s0) axis.
+
+    Backward pass: a reverse ``lax.scan`` over layers walks the parent
+    pointers (pa = block start, ps = predecessor state, gathered per batch
+    element) and emits the full [B, L] device-id assignment — no host loop.
+    """
+    L = compute.shape[0]
+    S = len(order)
+    B = rate.shape[0]
+    INF = jnp.inf
+    order_arr = jnp.asarray(order, jnp.int32)                       # [S]
+    pre_c = jnp.concatenate([jnp.zeros(1), jnp.cumsum(compute)])    # [L+1]
+    pre_m = jnp.concatenate([jnp.zeros(1), jnp.cumsum(memory)])
+    a_ix = jnp.arange(L)
+    # bits entering a block that starts at layer a (eq. 12 / eq. 14)
+    bits_in = jnp.where(a_ix == 0, input_bits,
+                        act_bits[jnp.maximum(a_ix - 1, 0)])         # [L]
+
+    mem_cap_o = mem_cap[order_arr]                                  # [S]
+    cmp_cap_o = compute_cap[order_arr]
+    thr_o = throughput[order_arr]
+    active_o = active[:, order_arr]                                 # [B, S]
+
+    # Transfer into a block on device order[s-1] from predecessor state s0:
+    # s0 >= 1 reads rate[order[s0-1], order[s-1]] (inf diagonal -> same-device
+    # transfer is 0); the s0 = 0 row is a placeholder — dp[a>0][0] is inf and
+    # the a = 0 row is overridden with the source rate below, exactly the
+    # scalar solver's `if a == 0` branch.
+    prev_dev = jnp.concatenate([jnp.zeros(1, jnp.int32), order_arr])
+    r_prev = rate[:, prev_dev[:, None], order_arr[None, :]]         # [B,S+1,S]
+    tr = jnp.where(r_prev[:, None, :, :] > 0,
+                   bits_in[None, :, None, None] / r_prev[:, None, :, :],
+                   INF)                                             # [B,L,S+1,S]
+    r_src = rate[jnp.arange(B), source][:, order_arr]               # [B, S]
+    tr_src = jnp.where(r_src > 0, input_bits / r_src, INF)
+    tr = tr.at[:, 0, :, :].set(tr_src[:, None, :])
+    # Bake the step-invariant masks into tr once: the predecessor state must
+    # precede the block's device state (s0 < s) and the device must be alive.
+    s0_lt_s = (jnp.arange(S + 1)[:, None]
+               < jnp.arange(1, S + 1)[None, :])                     # [S+1, S]
+    tr = jnp.where(s0_lt_s[None, None] & active_o[:, None, None, :],
+                   tr, INF)
+    # s0 minor-most: the inner reduction of each step runs over it
+    tr = tr.swapaxes(2, 3)                                          # [B,L,S,S+1]
+
+    dp0 = jnp.full((B, L + 1, S + 1), INF).at[:, 0, 0].set(0.0)
+
+    def forward(dp, b):
+        blk_c = pre_c[b] - pre_c[:L]                                # [L] (a)
+        blk_m = pre_m[b] - pre_m[:L]
+        ok = ((blk_m[:, None] <= mem_cap_o[None, :] + 1e-9) &
+              (blk_c[:, None] <= cmp_cap_o[None, :] + 1e-9) &
+              (a_ix < b)[:, None])                                  # [L, S]
+        ct = blk_c[:, None] / thr_o[None, :]                        # [L, S]
+        # Two-stage min keeps the bulk pass lean: reduce s0 on the full
+        # tensor first, then fold the step-dependent ct/ok terms (which are
+        # s0-independent) on the small [B, L, S] remainder.  First-argmin
+        # over s0 then over a == first-argmin over lexicographic (a, s0),
+        # the scalar solver's tie-break.
+        m1 = dp[:, :L, None, :] + tr                                # [B,L,S,S+1]
+        s0_best = jnp.argmin(m1, 3).astype(jnp.int32)               # [B, L, S]
+        cand = m1.min(3) + ct[None]
+        cand = jnp.where(ok[None], cand, INF)                       # [B, L, S]
+        a_best = jnp.argmin(cand, 1).astype(jnp.int32)              # [B, S]
+        row = jnp.concatenate([jnp.full((B, 1), INF), cand.min(1)], 1)
+        dp = dp.at[:, b, :].set(row)
+        pad = jnp.zeros((B, 1), jnp.int32)
+        pa = jnp.concatenate([pad, a_best], 1)                      # [B, S+1]
+        ps = jnp.concatenate(
+            [pad, jnp.take_along_axis(s0_best, a_best[:, None, :], 1)[:, 0]],
+            1)
+        return dp, (pa, ps)
+
+    dp, (pa, ps) = jax.lax.scan(forward, dp0, jnp.arange(1, L + 1))
+    final = dp[:, L, :]                                             # [B, S+1]
+    s_best = jnp.argmin(final, 1).astype(jnp.int32)
+    latency = final.min(1)
+
+    # Reverse scan j = L-1 .. 0; carry (b, s) = the DP state whose block
+    # [a, b) contains layer j.  pa/ps are stacked per forward step, so the
+    # parents of table row b live at pa[b-1].
+    rows = jnp.arange(B)
+
+    def backward(carry, j):
+        b, s = carry
+        dev = order_arr[jnp.maximum(s - 1, 0)]                      # [B]
+        bi = jnp.clip(b - 1, 0, L - 1)
+        a = pa[bi, rows, s]
+        s0 = ps[bi, rows, s]
+        at_start = j == a                  # layer j opens the block: hop to
+        nb = jnp.where(at_start, a, b)     # the parent state for layer j-1
+        ns = jnp.where(at_start, s0, s)
+        return (nb, ns), dev
+
+    init = (jnp.full((B,), L, jnp.int32), s_best)
+    _, devs = jax.lax.scan(backward, init, jnp.arange(L - 1, -1, -1))
+    assign = devs[::-1].T.astype(jnp.int32)                         # [B, L]
+    assign = jnp.where(jnp.isfinite(latency)[:, None], assign, -1)
+    return assign, latency
+
+
+@partial(jax.jit, static_argnames=("order",))
+def _chain_dp_tables_unrolled(compute: jnp.ndarray, memory: jnp.ndarray,
+                              act_bits: jnp.ndarray, input_bits: jnp.ndarray,
+                              mem_cap: jnp.ndarray, compute_cap: jnp.ndarray,
+                              throughput: jnp.ndarray, rate: jnp.ndarray,
+                              source: jnp.ndarray, active: jnp.ndarray,
+                              order: Tuple[int, ...]):
+    """DP tables for ``solve_chain_dp`` over a batch (PR 1 baseline).
 
     dp[b][s] = best cost of placing layers [0..b) with layer b-1 on device
     order[s-1]; candidates scan block starts a and predecessor states s0
@@ -207,6 +337,23 @@ def _chain_dp_tables(compute: jnp.ndarray, memory: jnp.ndarray,
     return latency, s_best, pa, ps
 
 
+def _as_dp_args(compute, memory, act_bits, input_bits, mem_cap, compute_cap,
+                throughput, rate, source, active, device_order):
+    B, U = rate.shape[0], rate.shape[-1]
+    order = tuple(device_order) if device_order is not None else \
+        tuple(range(U))
+    if active is None:
+        active = jnp.ones((B, U), dtype=bool)
+    return (jnp.asarray(compute, jnp.float32),
+            jnp.asarray(memory, jnp.float32),
+            jnp.asarray(act_bits, jnp.float32), jnp.float32(input_bits),
+            jnp.asarray(mem_cap, jnp.float32),
+            jnp.asarray(compute_cap, jnp.float32),
+            jnp.asarray(throughput, jnp.float32),
+            jnp.asarray(rate, jnp.float32),
+            jnp.asarray(source, jnp.int32), jnp.asarray(active)), order
+
+
 def solve_chain_dp_batched(compute: np.ndarray, memory: np.ndarray,
                            act_bits: np.ndarray, input_bits: float,
                            mem_cap: np.ndarray, compute_cap: np.ndarray,
@@ -215,27 +362,45 @@ def solve_chain_dp_batched(compute: np.ndarray, memory: np.ndarray,
                            active: Optional[np.ndarray] = None,
                            device_order: Optional[Sequence[int]] = None
                            ) -> Tuple[np.ndarray, np.ndarray]:
-    """Batched mirror of ``placement.solve_chain_dp``.
+    """Batched mirror of ``placement.solve_chain_dp`` (scan fast path).
 
     Args: per-layer ``compute``/``memory``/``act_bits`` [L] shared across the
     batch; device caps/throughput [U]; ``rate`` [B,U,U] (inf diagonal, 0 =
     infeasible link); ``source`` [B] capturing-UAV index; ``active`` [B,U].
 
     Returns ``(assign, latency)``: assign [B, L] device ids (-1 everywhere on
-    infeasible scenarios), latency [B] (inf when infeasible).
+    infeasible scenarios), latency [B] (inf when infeasible).  Solve AND
+    backtrack run in one jit call (``_chain_dp_solve``); compile cost is
+    O(1) in L and S, so U = L = 32 instances trace in seconds.
     """
-    B, U = rate.shape[0], rate.shape[-1]
-    order = tuple(device_order) if device_order is not None else \
-        tuple(range(U))
-    if active is None:
-        active = jnp.ones((B, U), dtype=bool)
-    latency, s_best, pa, ps = _chain_dp_tables(
-        jnp.asarray(compute, jnp.float32), jnp.asarray(memory, jnp.float32),
-        jnp.asarray(act_bits, jnp.float32), jnp.float32(input_bits),
-        jnp.asarray(mem_cap, jnp.float32),
-        jnp.asarray(compute_cap, jnp.float32),
-        jnp.asarray(throughput, jnp.float32), jnp.asarray(rate, jnp.float32),
-        jnp.asarray(source, jnp.int32), jnp.asarray(active), order)
+    args, order = _as_dp_args(compute, memory, act_bits, input_bits, mem_cap,
+                              compute_cap, throughput, rate, source, active,
+                              device_order)
+    assign, latency = _chain_dp_solve(*args, order)
+    return (np.asarray(assign, dtype=np.int64),
+            np.asarray(latency, dtype=np.float64))
+
+
+def solve_chain_dp_batched_unrolled(compute: np.ndarray, memory: np.ndarray,
+                                    act_bits: np.ndarray, input_bits: float,
+                                    mem_cap: np.ndarray,
+                                    compute_cap: np.ndarray,
+                                    throughput: np.ndarray, rate: np.ndarray,
+                                    source: np.ndarray,
+                                    active: Optional[np.ndarray] = None,
+                                    device_order: Optional[Sequence[int]]
+                                    = None
+                                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """The PR 1 implementation: Python-unrolled DP trace + host backtrack.
+
+    Same contract as ``solve_chain_dp_batched``.  Retained as the benchmark
+    baseline and parity oracle; its compile time grows O(L*S) with stacked
+    ops, so keep it to small instances.
+    """
+    args, order = _as_dp_args(compute, memory, act_bits, input_bits, mem_cap,
+                              compute_cap, throughput, rate, source, active,
+                              device_order)
+    latency, s_best, pa, ps = _chain_dp_tables_unrolled(*args, order)
     return (_reconstruct_assignments(np.asarray(latency), np.asarray(s_best),
                                      np.asarray(pa), np.asarray(ps),
                                      order, len(compute)),
@@ -262,5 +427,5 @@ def _reconstruct_assignments(latency: np.ndarray, s_best: np.ndarray,
 __all__ = [
     "BatchPowerSolution", "pairwise_dist_batched", "link_gain_batched",
     "power_threshold_batched", "solve_power_batched", "rate_matrix_batched",
-    "solve_chain_dp_batched",
+    "solve_chain_dp_batched", "solve_chain_dp_batched_unrolled",
 ]

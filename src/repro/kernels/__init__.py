@@ -1,3 +1,26 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared Pallas-kernel helpers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Backend-resolved default for Pallas ``interpret`` flags.
+
+    ``None`` (the default everywhere in ``repro.kernels``) resolves at call
+    time: compiled kernels on TPU, interpreter mode on every other backend
+    (CPU/GPU have no Mosaic lowering for these kernels).  Pass an explicit
+    bool to force either mode — e.g. ``interpret=True`` on TPU to debug a
+    kernel, or ``False`` to assert compiled execution.
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+__all__ = ["resolve_interpret"]

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 DEFAULT_BLOCK_M = 128
 DEFAULT_BLOCK_N = 128
 DEFAULT_BLOCK_K = 128
@@ -47,8 +49,9 @@ def matmul_bias_act(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
                     relu: bool = True, block_m: int = DEFAULT_BLOCK_M,
                     block_n: int = DEFAULT_BLOCK_N,
                     block_k: int = DEFAULT_BLOCK_K,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """[M, K] @ [K, N] + b[N] (fused ReLU) -> [M, N]."""
+    interpret = resolve_interpret(interpret)
     m, k = x.shape
     n = w.shape[1]
     block_m = min(block_m, m)

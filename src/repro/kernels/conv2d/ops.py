@@ -1,4 +1,5 @@
-"""Jit'd conv wrapper: im2col layout (XLA gather) + Pallas tiled matmul."""
+"""Jit'd conv wrapper: im2col layout (one fused patch gather) + Pallas tiled
+matmul."""
 from __future__ import annotations
 
 import functools
@@ -12,28 +13,34 @@ from repro.kernels.conv2d.ref import conv2d_ref
 
 def _im2col(x: jnp.ndarray, kh: int, kw: int, stride: int,
             padding: int) -> jnp.ndarray:
-    """x [N,H,W,C] -> patches [N*OH*OW, KH*KW*C]."""
+    """x [N,H,W,C] -> patches [N*OH*OW, KH*KW*C].
+
+    One ``conv_general_dilated_patches`` call instead of KH*KW strided
+    slices — a single XLA op per conv layer regardless of filter size.
+    Its feature axis is ordered (C, KH, KW); transpose back to the
+    (KH, KW, C) layout the weight reshape in ``conv2d`` expects.
+    """
     n, h, w, c = x.shape
-    if padding:
-        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding),
-                        (0, 0)))
     oh = (h + 2 * padding - kh) // stride + 1
     ow = (w + 2 * padding - kw) // stride + 1
-    cols = []
-    for i in range(kh):
-        for j in range(kw):
-            cols.append(jax.lax.slice(
-                x, (0, i, j, 0),
-                (n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
-                (1, stride, stride, 1)))
-    patches = jnp.stack(cols, axis=3)          # [N,OH,OW,KH*KW,C]
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride),
+        [(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))   # [N,OH,OW,C*KH*KW]
+    patches = patches.reshape(n, oh, ow, c, kh * kw)
+    patches = jnp.moveaxis(patches, 3, 4)             # [N,OH,OW,KH*KW,C]
     return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
 
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
            stride: int = 1, padding: int = 0, relu: bool = True,
-           use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
-    """im2col conv: x [N,H,W,C]; w [KH,KW,C,OC] -> [N,OH,OW,OC]."""
+           use_kernel: bool = True,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """im2col conv: x [N,H,W,C]; w [KH,KW,C,OC] -> [N,OH,OW,OC].
+
+    ``interpret=None`` resolves per backend (compiled on TPU, interpreter
+    elsewhere) via ``repro.kernels.resolve_interpret``.
+    """
     if not use_kernel:
         return conv2d_ref(x, w, b, stride=stride, padding=padding,
                           relu=relu)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 DEFAULT_BLOCK_K = 512
 NEG_INF = -1e30
 
@@ -66,8 +68,9 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      pos: jnp.ndarray, *, cap: float = 0.0,
                      scale: float | None = None,
                      block_k: int = DEFAULT_BLOCK_K,
-                     interpret: bool = True) -> jnp.ndarray:
+                     interpret: bool | None = None) -> jnp.ndarray:
     """q [B,KV,G,D]; k/v [B,KV,S,D]; pos [B] -> out [B,KV,G,D]."""
+    interpret = resolve_interpret(interpret)
     b, kv, g, d = q.shape
     s = k.shape[2]
     scale = (1.0 / math.sqrt(d)) if scale is None else scale

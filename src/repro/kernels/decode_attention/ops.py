@@ -9,7 +9,7 @@ from repro.kernels.decode_attention.ref import decode_ref
 
 def decode_mha(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                pos: jnp.ndarray, *, cap: float = 0.0,
-               use_kernel: bool = True, interpret: bool = True
+               use_kernel: bool = True, interpret: bool | None = None
                ) -> jnp.ndarray:
     """q [B,1,H,D]; caches [B,S,KV,D]; pos [B] -> [B,1,H,D]."""
     b, _, h, d = q.shape

@@ -16,7 +16,8 @@ from repro.kernels.flash_attention.ref import attention_ref
 
 def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         causal: bool = True, window: int = 0, cap: float = 0.0,
-        use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+        use_kernel: bool = True,
+        interpret: bool | None = None) -> jnp.ndarray:
     """q [B,S,H,D]; k/v [B,S,KV,D] -> [B,S,H,D]."""
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 NEG_BIG = -1e30
 
 
@@ -75,11 +77,12 @@ def _mlstm_kernel(q_ref, k_ref, v_ref, a_ref, b_ref, mx_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def mlstm_chunk(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                 i_pre: jnp.ndarray, f_pre: jnp.ndarray, *,
-                chunk: int = 128, interpret: bool = True) -> jnp.ndarray:
+                chunk: int = 128, interpret: bool | None = None) -> jnp.ndarray:
     """q,k,v [B,H,S,D] (q pre-scaled by 1/sqrt(D)); gates [B,H,S].
 
     Returns h [B,H,S,D].  State starts at zero (fresh sequence).
     """
+    interpret = resolve_interpret(interpret)
     bsz, h, s, d = q.shape
     chunk = min(chunk, s)
     assert s % chunk == 0, "seq must divide into chunks"

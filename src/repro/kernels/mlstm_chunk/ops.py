@@ -11,7 +11,7 @@ from repro.kernels.mlstm_chunk.ref import mlstm_ref
 
 def mlstm(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
           i_pre: jnp.ndarray, f_pre: jnp.ndarray, *, chunk: int = 128,
-          use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+          use_kernel: bool = True, interpret: bool | None = None) -> jnp.ndarray:
     """q,k,v [B,H,S,D] (unscaled q); gates [B,H,S] -> h [B,H,S,D]."""
     q = q * (1.0 / math.sqrt(q.shape[-1]))
     if use_kernel:

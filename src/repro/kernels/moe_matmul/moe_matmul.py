@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 DEFAULT_BLOCK = 128
 
 
@@ -41,8 +43,9 @@ def _moe_kernel(x_ref, w_ref, o_ref, acc_ref, *, d_blocks: int):
 def moe_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
                block_c: int = DEFAULT_BLOCK, block_f: int = DEFAULT_BLOCK,
                block_d: int = DEFAULT_BLOCK,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
     """x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
+    interpret = resolve_interpret(interpret)
     e, c, d = x.shape
     f = w.shape[2]
     block_c = min(block_c, c)

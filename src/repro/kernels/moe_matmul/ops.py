@@ -8,7 +8,7 @@ from repro.kernels.moe_matmul.ref import moe_matmul_ref
 
 
 def expert_gemm(x: jnp.ndarray, w: jnp.ndarray, *, use_kernel: bool = True,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool | None = None) -> jnp.ndarray:
     """Grouped GEMM over the dispatched buffer: [E,C,D] @ [E,D,F]."""
     if use_kernel:
         return moe_matmul(x, w, interpret=interpret)

@@ -8,7 +8,7 @@ from repro.kernels.rglru_scan.rglru_scan import rglru_scan
 
 
 def linear_recurrence(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
-                      use_kernel: bool = True, interpret: bool = True):
+                      use_kernel: bool = True, interpret: bool | None = None):
     """h_t = a_t h_{t-1} + b_t over [B, T, W]; returns (h, h_T)."""
     if use_kernel:
         return rglru_scan(a, b, h0, interpret=interpret)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 DEFAULT_BLOCK_W = 128
 
 
@@ -37,8 +39,9 @@ def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hT_ref, *, seq_len: int):
 
 @functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
 def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, *,
-               block_w: int = DEFAULT_BLOCK_W, interpret: bool = True):
+               block_w: int = DEFAULT_BLOCK_W, interpret: bool | None = None):
     """a, b: [B, T, W] gates/inputs; h0: [B, W] -> (h [B,T,W], hT [B,W])."""
+    interpret = resolve_interpret(interpret)
     bsz, t, w = a.shape
     block_w = min(block_w, w)
     grid = (bsz, pl.cdiv(w, block_w))

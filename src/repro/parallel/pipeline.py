@@ -28,6 +28,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Pytree = Any
 
 
+def _shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """shard_map across jax versions: ``jax.shard_map`` (jax >= 0.6, where
+    replication checking is ``check_vma``) with a fallback to
+    ``jax.experimental.shard_map`` (jax 0.4/0.5, where it is ``check_rep``).
+    Replication checking is disabled either way: the last-stage psum install
+    pattern is not inferable."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as exp_shard_map
+    return exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
 def stage_params(params_per_block: Sequence[Pytree],
                  boundaries: Sequence[int]) -> List[Pytree]:
     """Group per-block params into per-stage lists per a StagePlan."""
@@ -117,10 +131,9 @@ def pipelined_forward(block_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray],
             axis)
         return outs
 
-    fn = jax.shard_map(
-        stage_fn, mesh=mesh,
+    fn = _shard_map(
+        stage_fn, mesh,
         in_specs=(P(axis), P(axis), P()),
-        out_specs=P(),
-        check_vma=False)
+        out_specs=P())
     outs = fn(stacked, depths, micro)
     return outs.reshape(b, *x.shape[1:])

@@ -125,6 +125,17 @@ class FaultTolerantRunner:
                             "precomputed": precomputed})
         return self.state.plan
 
+    def rearm_contingency(self, table: object) -> None:
+        """Install a fresh precomputed failure table.
+
+        After a failure/demotion invalidates the old table, build a
+        ``ContingencyTable`` over a ``ScenarioEngine`` for the CURRENT
+        survivor devices (the old engine is specialized to the old swarm)
+        and re-arm the fast delegation path here.  For pure mobility
+        updates — same devices, new positions — ``ContingencyTable.refresh``
+        on the existing table is enough and costs no recompile."""
+        self.contingency = table
+
     def on_straggler(self, slow_names: Sequence[str]) -> object:
         """Demote straggler throughput and shift load away (re-plan)."""
         new_devs = []

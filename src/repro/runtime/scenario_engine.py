@@ -32,8 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import (pairwise_dist_batched, power_threshold_batched,
-                              rate_matrix_batched, solve_chain_dp_batched,
+from repro.core.batch import (_chain_dp_solve, pairwise_dist_batched,
+                              power_threshold_batched, rate_matrix_batched,
                               solve_power_batched)
 from repro.core.channel import RadioChannel, RadioParams
 from repro.core.cost_model import ModelCost
@@ -135,6 +135,124 @@ class ScenarioGenerator:
 
 
 # ---------------------------------------------------------------------------
+# Compiled-plan cache
+# ---------------------------------------------------------------------------
+
+
+class PlanFnCache:
+    """Process-wide cache of the engine's jit-compiled planning callables.
+
+    Keyed on the static problem signature — (U, L, device order, dtype,
+    radio params, device-cap and model-cost constants) — so every
+    ``ScenarioEngine`` with the same configuration shares ONE set of
+    compiled functions: re-instantiating an engine (a new
+    ``PeriodicReplanner``, a ``ContingencyTable`` rebuild, a benchmark
+    rerun) never re-traces.  jax.jit's own per-shape cache handles varying
+    batch sizes under each entry, so a steady workload (fixed B) compiles
+    exactly once per signature.
+
+    ``traces`` counts *actual retraces* per key: the counter is bumped from
+    inside the traced body, so it only moves when XLA really recompiles.
+    Tests and benchmarks assert it stays flat across frames.
+
+    The cache is LRU-bounded (``maxsize`` signatures): a long-running serve
+    process that keeps reconfiguring its swarm (failures, straggler
+    demotions) touches a fresh signature each time, and without eviction
+    every old compiled executable would be pinned for the life of the
+    process.  Evicting an entry only drops the cache's reference — an
+    engine still holding the callable keeps working, it just recompiles on
+    its next cache lookup.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self._fns: Dict[tuple, object] = {}   # dicts iterate in LRU order
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.traces: Dict[tuple, int] = {}
+
+    def get(self, key: tuple, builder):
+        """Compiled callable for ``key``; ``builder(on_trace)`` makes it."""
+        fn = self._fns.pop(key, None)
+        if fn is None:
+            self.misses += 1
+            self.traces.setdefault(key, 0)
+            fn = builder(partial(self._bump, key))
+            while len(self._fns) >= self.maxsize:
+                old = next(iter(self._fns))
+                del self._fns[old]
+                self.traces.pop(old, None)
+                self.evictions += 1
+        else:
+            self.hits += 1
+        self._fns[key] = fn       # (re)insert at the most-recent end
+        return fn
+
+    def _bump(self, key: tuple) -> None:
+        # .get: a live engine may retrace after clear() emptied the dict
+        self.traces[key] = self.traces.get(key, 0) + 1
+
+    def trace_count(self, keys: Optional[Sequence[tuple]] = None) -> int:
+        keys = self.traces.keys() if keys is None else keys
+        return sum(self.traces.get(k, 0) for k in keys)
+
+    def info(self) -> Dict[str, object]:
+        return {"entries": len(self._fns), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "traces": self.trace_count()}
+
+    def clear(self) -> None:
+        self._fns.clear()
+        self.traces.clear()
+        self.hits = self.misses = self.evictions = 0
+
+
+#: Default shared cache — all engines in the process use it unless they are
+#: constructed with an explicit private one.
+PLAN_FN_CACHE = PlanFnCache()
+
+
+def _build_solve_fn(on_trace, *, params: RadioParams, compute, memory,
+                    act_bits, input_bits, mem_cap, compute_cap, throughput,
+                    order: Tuple[int, ...]):
+    """One fused jit: positions -> P1 powers -> eq. (5) rates -> chain-DP
+    placement (solve + device-side backtrack).  Also returns the distances
+    and eq. (7) thresholds so the used-links tighten pass reuses them."""
+    compute = jnp.asarray(compute, jnp.float32)
+    memory = jnp.asarray(memory, jnp.float32)
+    act_bits = jnp.asarray(act_bits, jnp.float32)
+    input_bits = jnp.float32(input_bits)
+    mem_cap = jnp.asarray(mem_cap, jnp.float32)
+    compute_cap = jnp.asarray(compute_cap, jnp.float32)
+    throughput = jnp.asarray(throughput, jnp.float32)
+
+    def solve(positions, source, active, gain_scale):
+        on_trace()
+        dist = pairwise_dist_batched(positions)
+        th = power_threshold_batched(dist, params, gain_scale=gain_scale)
+        pw = solve_power_batched(dist, params, active=active,
+                                 gain_scale=gain_scale, threshold_matrix=th)
+        rate = rate_matrix_batched(dist, pw.power, params, pw.link_feasible,
+                                   gain_scale=gain_scale)
+        assign, latency = _chain_dp_solve(
+            compute, memory, act_bits, input_bits, mem_cap, compute_cap,
+            throughput, rate, source, active, order)
+        return pw.power, rate, dist, th, assign, latency
+
+    return jax.jit(solve)
+
+
+def _build_tighten_fn(on_trace, *, params: RadioParams):
+    def tighten(dist, threshold_matrix, links, active):
+        on_trace()
+        return solve_power_batched(dist, params, links=links, active=active,
+                                   threshold_matrix=threshold_matrix).power
+
+    return jax.jit(tighten)
+
+
+# ---------------------------------------------------------------------------
 # Batched planning engine
 # ---------------------------------------------------------------------------
 
@@ -191,15 +309,20 @@ class BatchPlan:
 class ScenarioEngine:
     """Vectorized LLHR fast path: batched P1 + eq. (5) + chain-DP placement.
 
-    One instance is specialized to a (channel, devices, model) triple; the
-    power/rate pipeline is jit-compiled once and reused across every
-    ``plan_batch`` call of the same batch size (XLA caches per shape).
+    One instance is specialized to a (channel, devices, model) triple.  The
+    whole positions -> powers -> rates -> placement (+ backtrack) pipeline
+    is ONE jit call, compiled at most once per static problem signature per
+    process: engines resolve their callables through ``PLAN_FN_CACHE`` (or
+    the ``plan_cache`` passed in), so rebuilding an engine — or planning
+    from a different wrapper such as ``ContingencyTable`` — reuses the
+    already-compiled plan.
     """
 
     def __init__(self, channel: RadioChannel | RadioParams,
                  devices: Sequence[Device], model: ModelCost,
                  device_order: Optional[Sequence[int]] = None,
-                 act_scale: float = 1.0):
+                 act_scale: float = 1.0,
+                 plan_cache: Optional[PlanFnCache] = None):
         self.params = channel.params if isinstance(channel, RadioChannel) \
             else channel
         self.devices = list(devices)
@@ -213,8 +336,39 @@ class ScenarioEngine:
         self.mem_cap = np.array([d.mem_cap for d in self.devices])
         self.compute_cap = np.array([d.compute_cap for d in self.devices])
         self.throughput = np.array([d.throughput for d in self.devices])
-        self._radio = jax.jit(partial(_solve_radio, params=self.params))
-        self._tighten = jax.jit(partial(_tighten_power, params=self.params))
+        self.plan_cache = plan_cache if plan_cache is not None \
+            else PLAN_FN_CACHE
+        solve_key, tighten_key = self._cache_keys()
+        self._cache_keys_used = (solve_key, tighten_key)
+        self._solve = self.plan_cache.get(solve_key, partial(
+            _build_solve_fn, params=self.params, compute=self.compute,
+            memory=self.memory, act_bits=self.act_bits,
+            input_bits=self.input_bits, mem_cap=self.mem_cap,
+            compute_cap=self.compute_cap, throughput=self.throughput,
+            order=self.order))
+        self._tighten = self.plan_cache.get(tighten_key, partial(
+            _build_tighten_fn, params=self.params))
+
+    def _cache_keys(self) -> Tuple[tuple, tuple]:
+        """Static signature of the compiled plan: (U, L, S=|order|, dtype)
+        plus every constant baked into the traced graph, so two engines
+        share an entry exactly when their compiled plans would be
+        identical."""
+        base = (len(self.devices), len(self.compute), self.order, "float32",
+                self.params)
+        consts = (self.compute.tobytes(), self.memory.tobytes(),
+                  self.act_bits.tobytes(), self.input_bits,
+                  self.mem_cap.tobytes(), self.compute_cap.tobytes(),
+                  self.throughput.tobytes())
+        return ("solve",) + base + consts, ("tighten", self.params)
+
+    @property
+    def trace_count(self) -> int:
+        """Total XLA traces paid for THIS engine's cache entries."""
+        return self.plan_cache.trace_count(self._cache_keys_used)
+
+    def plan_cache_info(self) -> Dict[str, object]:
+        return self.plan_cache.info()
 
     # ------------------------------------------------------------------
     def plan_batch(self, scenarios: ScenarioBatch) -> BatchPlan:
@@ -224,14 +378,12 @@ class ScenarioEngine:
             np.ones((B_, U), dtype=bool)
         gain = scenarios.gain_scale
         active_j = jnp.asarray(active)
-        power, rate, dist, th = self._radio(
-            jnp.asarray(scenarios.positions, jnp.float32), active_j,
+        power, rate, dist, th, assign_j, latency_j = self._solve(
+            jnp.asarray(scenarios.positions, jnp.float32),
+            jnp.asarray(scenarios.source, jnp.int32), active_j,
             None if gain is None else jnp.asarray(gain, jnp.float32))
-        assign, latency = solve_chain_dp_batched(
-            self.compute, self.memory, self.act_bits, self.input_bits,
-            self.mem_cap, self.compute_cap, self.throughput,
-            rate, scenarios.source, active=active,
-            device_order=self.order)
+        assign = np.asarray(assign_j, dtype=np.int64)
+        latency = np.asarray(latency_j, dtype=np.float64)
         # tighten P1 to the links each placement actually uses (the scalar
         # planner's min_power_for_placement step, batched); dist and the
         # eq. (7) thresholds are reused from the first solve
@@ -248,30 +400,6 @@ class ScenarioEngine:
         batch = ScenarioBatch(positions=np.asarray(positions)[None],
                               source=np.array([source]))
         return self.plan_batch(batch)
-
-
-def _solve_radio(positions: jnp.ndarray, active: jnp.ndarray,
-                 gain_scale: Optional[jnp.ndarray], *, params: RadioParams):
-    """Jit-compiled P1 + rate pipeline (positions -> powers -> rho).
-
-    Also returns the distances and eq. (7) threshold matrix so the
-    used-links tighten pass doesn't recompute them."""
-    dist = pairwise_dist_batched(positions)
-    th = power_threshold_batched(dist, params, gain_scale=gain_scale)
-    pw = solve_power_batched(dist, params, active=active,
-                             gain_scale=gain_scale, threshold_matrix=th)
-    rate = rate_matrix_batched(dist, pw.power, params, pw.link_feasible,
-                               gain_scale=gain_scale)
-    return pw.power, rate, dist, th
-
-
-def _tighten_power(dist: jnp.ndarray, threshold_matrix: jnp.ndarray,
-                   links: jnp.ndarray, active: jnp.ndarray,
-                   *, params: RadioParams) -> jnp.ndarray:
-    """P1 restricted to the links a placement uses (min_power_for_placement
-    batched): powers sized only for the transfers that actually happen."""
-    return solve_power_batched(dist, params, links=links, active=active,
-                               threshold_matrix=threshold_matrix).power
 
 
 def _used_links_mask(assign: np.ndarray, source: np.ndarray,
@@ -341,11 +469,29 @@ class ContingencyTable:
     def __init__(self, engine: ScenarioEngine, positions: np.ndarray,
                  source: int = 0):
         self.engine = engine
+        self.plans: Dict[Optional[str], ContingencyPlan] = {}
+        self.refresh(positions, source=source)
+
+    def refresh(self, positions: np.ndarray, source: int = 0) -> None:
+        """Recompute the failure sweep at new positions, in place.
+
+        Because the engine's compiled plan is cached per static signature
+        (``PlanFnCache``), a refresh after a mobility update is a pure
+        device-side re-execution — no retrace — so the table can follow the
+        swarm every replanning period.  The engine is specialized to a fixed
+        device set: a refresh for a *shrunk* swarm (post-failure) needs a
+        new engine, not new positions."""
+        engine = self.engine
+        if positions.shape[0] != len(engine.devices):
+            raise ValueError(
+                f"positions are for {positions.shape[0]} UAVs but the engine "
+                f"plans {len(engine.devices)}; build a new ScenarioEngine "
+                f"(and table) for a changed swarm")
         sweep = ScenarioGenerator(positions).failure_sweep(source=source)
         U = positions.shape[0]
         plan = engine.plan_batch(sweep)
         names = [d.name for d in engine.devices]
-        self.plans: Dict[Optional[str], ContingencyPlan] = {}
+        self.plans.clear()
         for k in range(U):
             self.plans[names[k]] = ContingencyPlan(
                 dead=names[k], dead_index=k,
@@ -372,5 +518,5 @@ class ContingencyTable:
 
 __all__ = [
     "ScenarioBatch", "ScenarioGenerator", "BatchPlan", "ScenarioEngine",
-    "ContingencyPlan", "ContingencyTable",
+    "ContingencyPlan", "ContingencyTable", "PlanFnCache", "PLAN_FN_CACHE",
 ]

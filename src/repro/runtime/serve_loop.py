@@ -10,6 +10,7 @@ batches keep serving off the cached plan between refreshes.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -164,6 +165,8 @@ class PeriodicReplanner:
         self.source = source
         self.plan = None           # BatchPlan of the last refresh
         self.refreshes = 0
+        self.last_refresh_s = 0.0  # wall-clock of the latest plan_batch call
+        self._retraces = 0         # traces paid by refreshes after the first
 
     # ------------------------------------------------------------------
     def tick(self, frame: int,
@@ -185,9 +188,26 @@ class PeriodicReplanner:
         if batch.gain_scale is not None:
             batch.gain_scale[0] = 1.0
         batch.source[0] = self.source
+        trace_before = getattr(self.engine, "trace_count", 0)
+        t0 = time.perf_counter()
         self.plan = self.engine.plan_batch(batch)
+        self.last_refresh_s = time.perf_counter() - t0
+        if self.refreshes > 0:
+            # only traces paid DURING this refresh count: another engine
+            # sharing the process-wide cache key must not show up here
+            self._retraces += (getattr(self.engine, "trace_count", 0)
+                               - trace_before)
         self.refreshes += 1
         return True
+
+    @property
+    def retraces(self) -> int:
+        """XLA retraces paid by refreshes AFTER the first one.
+
+        The first refresh compiles (or hits the process-wide plan cache);
+        every later tick re-executes the same compiled plan, so this stays
+        0 in a healthy loop — the regression tests assert exactly that."""
+        return self._retraces
 
     # ------------------------------------------------------------------
     @property

@@ -1,0 +1,253 @@
+"""Scan-based chain-DP fast path + compiled-plan cache regressions.
+
+The scan DP (``_chain_dp_solve`` behind ``solve_chain_dp_batched``) must be
+*indistinguishable* from both oracles:
+
+* ``placement.solve_chain_dp``         — elementwise costs AND backtracked
+                                         assignments, including tie-breaks
+                                         (a outer, s0 inner, strict
+                                         improvement), failed UAVs and
+                                         infeasible links;
+* the PR 1 unrolled tracer             — bit-identical assignments and
+  (``solve_chain_dp_batched_unrolled``)  latencies on shared inputs.
+
+The plan cache (``PlanFnCache``) must hand identical compiled plans to
+every engine with the same signature and never retrace across frames — the
+trace counters are bumped from inside the traced bodies, so they move only
+on a real XLA retrace.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.lenet import LENET
+from repro.core import (Device, PlacementProblem, RadioChannel, RadioParams,
+                        cnn_cost, make_devices, solve_chain_dp,
+                        solve_chain_dp_batched, solve_power,
+                        solve_power_batched)
+from repro.core.batch import (rate_matrix_batched,
+                              solve_chain_dp_batched_unrolled)
+from repro.core.positions import hex_init
+from repro.runtime.scenario_engine import (ContingencyTable, PlanFnCache,
+                                           ScenarioEngine, ScenarioGenerator)
+from repro.runtime.serve_loop import PeriodicReplanner
+
+RTOL = 1e-5
+PARAMS = RadioParams()
+CH = RadioChannel(PARAMS)
+
+
+def random_rate(n_scenarios, n_uavs, seed=0, spread=120.0, active=None):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, spread, (n_scenarios, n_uavs, 2))
+    dist = np.sqrt(((pos[:, :, None] - pos[:, None, :]) ** 2).sum(-1))
+    sol = solve_power_batched(dist, PARAMS, active=active)
+    rate = np.asarray(rate_matrix_batched(dist, sol.power, PARAMS,
+                                          sol.link_feasible))
+    return rate, dist, rng
+
+
+def dp_args(compute, memory, act, input_bits, devs, rate, src):
+    return (compute, memory, act, input_bits,
+            np.array([d.mem_cap for d in devs]),
+            np.array([d.compute_cap for d in devs]),
+            np.array([d.throughput for d in devs]), rate, src)
+
+
+def lenet_case(n_scenarios, n_uavs, seed, spread=120.0, mem_frac=1.0,
+               active=None):
+    mc = cnn_cost(LENET)
+    compute = np.array([l.flops for l in mc.layers])
+    memory = np.array([l.weight_bytes for l in mc.layers])
+    act = np.array([l.act_bits for l in mc.layers])
+    devs = make_devices(n_uavs, mem_frac=mem_frac)
+    rate, dist, rng = random_rate(n_scenarios, n_uavs, seed=seed,
+                                  spread=spread, active=active)
+    src = rng.integers(0, n_uavs, n_scenarios)
+    return (dp_args(compute, memory, act, mc.input_bits, devs, rate, src),
+            devs, dist, mc)
+
+
+class TestScanDP:
+    def test_scalar_oracle_parity_costs_and_assignments(self):
+        """Latency AND the backtracked assignment match the NumPy solver
+        exactly (same tie-breaks) on randomized instances."""
+        for seed in range(4):
+            args, devs, dist, mc = lenet_case(12, 5, seed)
+            assign, lat = solve_chain_dp_batched(*args)
+            rate, src = args[7], args[8]
+            for n in range(12):
+                p = PlacementProblem(args[0], args[1], args[2], devs,
+                                     rate[n], source=int(src[n]),
+                                     input_bits=args[3])
+                sol = solve_chain_dp(p)
+                assert np.isfinite(lat[n]) == np.isfinite(sol.latency)
+                if np.isfinite(sol.latency):
+                    np.testing.assert_allclose(lat[n], sol.latency,
+                                               rtol=RTOL)
+                    assert tuple(assign[n]) == sol.assign
+
+    def test_matches_unrolled_tracer_bitwise(self):
+        """The scan rewrite is a pure reformulation of the PR 1 tracer:
+        identical assignments, latencies equal to float32 rounding."""
+        for seed, spread, mem_frac in ((0, 120.0, 1.0), (1, 60.0, 0.5),
+                                       (2, 400.0, 1.0)):
+            args, _, _, _ = lenet_case(10, 6, seed, spread=spread,
+                                       mem_frac=mem_frac)
+            a_new, l_new = solve_chain_dp_batched(*args)
+            a_old, l_old = solve_chain_dp_batched_unrolled(*args)
+            np.testing.assert_array_equal(a_new, a_old)
+            np.testing.assert_allclose(l_new, l_old, rtol=1e-6)
+
+    def test_failed_uav_excluded_and_matches_survivor_subproblem(self):
+        n_scenarios, n_uavs = 6, 5
+        active = np.ones((n_scenarios, n_uavs), dtype=bool)
+        dead = [n % n_uavs for n in range(n_scenarios)]
+        active[np.arange(n_scenarios), dead] = False
+        mc = cnn_cost(LENET)
+        compute = np.array([l.flops for l in mc.layers])
+        memory = np.array([l.weight_bytes for l in mc.layers])
+        act = np.array([l.act_bits for l in mc.layers])
+        devs = make_devices(n_uavs)
+        rate, dist, _ = random_rate(n_scenarios, n_uavs, seed=8,
+                                    active=active)
+        src = np.array([(d + 1) % n_uavs for d in dead])
+        args = dp_args(compute, memory, act, mc.input_bits, devs, rate, src)
+        assign, lat = solve_chain_dp_batched(*args, active=active)
+        for n in range(n_scenarios):
+            assert dead[n] not in assign[n]
+            alive = np.flatnonzero(active[n])
+            sub_rate = solve_power(dist[n][np.ix_(alive, alive)], CH) \
+                .rate_matrix(CH, dist[n][np.ix_(alive, alive)])
+            p = PlacementProblem(compute, memory, act,
+                                 [devs[i] for i in alive], sub_rate,
+                                 source=int(np.where(alive == src[n])[0][0]),
+                                 input_bits=mc.input_bits)
+            sol = solve_chain_dp(p)
+            assert np.isfinite(lat[n]) == np.isfinite(sol.latency)
+            if np.isfinite(sol.latency):
+                np.testing.assert_allclose(lat[n], sol.latency, rtol=RTOL)
+                # map survivor-space oracle assignment back to swarm ids
+                assert tuple(assign[n]) == tuple(alive[j] for j in sol.assign)
+
+    def test_infeasible_scenarios_are_minus_one(self):
+        args, _, _, _ = lenet_case(6, 4, seed=7, spread=5000.0,
+                                   mem_frac=1e-4)
+        assign, lat = solve_chain_dp_batched(*args)
+        assert not np.isfinite(lat).any()
+        assert (assign == -1).all()
+
+    def test_tie_break_parity_with_scalar_solver(self):
+        """Engineered exact ties (identical devices, power-of-two costs, one
+        shared rate) — the scan DP must pick the scalar solver's candidate:
+        first (a, s0) in lexicographic order with strict improvement."""
+        L, U = 6, 5
+        compute = np.full(L, 1.0)
+        memory = np.full(L, 1.0)
+        act = np.full(L, 4.0)
+        input_bits = 4.0
+        devs = [Device(f"u{i}", mem_cap=2.0, compute_cap=64.0,
+                       throughput=1.0) for i in range(U)]
+        rate = np.full((U, U), 2.0)
+        np.fill_diagonal(rate, np.inf)
+        for src in range(3):
+            args = dp_args(compute, memory, act, input_bits, devs,
+                           np.broadcast_to(rate, (2, U, U)).copy(),
+                           np.array([src, src]))
+            assign, lat = solve_chain_dp_batched(*args)
+            p = PlacementProblem(compute, memory, act, devs, rate,
+                                 source=src, input_bits=input_bits)
+            sol = solve_chain_dp(p)
+            # all values are exactly representable: latencies must be EQUAL
+            assert float(lat[0]) == sol.latency
+            assert tuple(assign[0]) == sol.assign
+            assert tuple(assign[1]) == sol.assign
+
+    def test_large_instance_traces_and_solves(self):
+        """U = L = 32 — intractable for the unrolled tracer — must trace,
+        solve, and return a cost-consistent plan."""
+        rng = np.random.default_rng(3)
+        L, U, B = 32, 32, 4
+        compute = np.abs(rng.normal(7e7, 3e7, L)) + 1e6
+        memory = np.abs(rng.normal(2e6, 1e6, L)) + 1e4
+        act = np.abs(rng.normal(6e5, 3e5, L)) + 1e4
+        devs = make_devices(U)
+        rate, _, _ = random_rate(B, U, seed=3, spread=250.0)
+        src = rng.integers(0, U, B)
+        args = dp_args(compute, memory, act, 1e6, devs, rate, src)
+        assign, lat = solve_chain_dp_batched(*args)
+        assert assign.shape == (B, L) and lat.shape == (B,)
+        for n in range(B):
+            if not np.isfinite(lat[n]):
+                continue
+            p = PlacementProblem(compute, memory, act, devs, rate[n],
+                                 source=int(src[n]), input_bits=1e6)
+            assert p.feasible(assign[n])
+            np.testing.assert_allclose(p.latency(assign[n]), lat[n],
+                                       rtol=RTOL)
+
+
+class TestPlanCache:
+    def _setup(self, n_uavs=5, cache=None):
+        mc = cnn_cost(LENET)
+        devs = make_devices(n_uavs)
+        cache = cache if cache is not None else PlanFnCache()
+        engine = ScenarioEngine(CH, devs, mc, plan_cache=cache)
+        return engine, hex_init(n_uavs, 40.0), cache
+
+    def test_cache_shared_across_engines_identical_plans(self):
+        engine1, base, cache = self._setup()
+        assert cache.misses == 2 and cache.hits == 0    # solve + tighten
+        engine2, _, _ = self._setup(cache=cache)
+        assert cache.misses == 2 and cache.hits == 2    # same signature
+        batch = ScenarioGenerator(base, pos_sigma_m=2.0, seed=0).draw(8)
+        p1 = engine1.plan_batch(batch)
+        p2 = engine2.plan_batch(batch)
+        np.testing.assert_array_equal(p1.assign, p2.assign)
+        np.testing.assert_allclose(p1.latency, p2.latency)
+        np.testing.assert_allclose(p1.power, p2.power)
+        # ONE compile served both engines
+        assert engine1.trace_count == 2
+        assert engine2.trace_count == 2
+
+    def test_plan_batch_never_retraces_at_fixed_shape(self):
+        engine, base, _ = self._setup()
+        gen = ScenarioGenerator(base, pos_sigma_m=2.0, seed=1)
+        first = engine.plan_batch(gen.draw(8))
+        traces = engine.trace_count
+        assert traces > 0
+        plans = [engine.plan_batch(gen.draw(8)) for _ in range(5)]
+        assert engine.trace_count == traces      # zero retraces
+        again = engine.plan_batch(first.scenarios)
+        np.testing.assert_array_equal(again.assign, first.assign)
+        np.testing.assert_allclose(again.latency, first.latency)
+
+    def test_new_batch_shape_retraces_once(self):
+        engine, base, _ = self._setup()
+        gen = ScenarioGenerator(base, pos_sigma_m=2.0, seed=2)
+        engine.plan_batch(gen.draw(8))
+        t8 = engine.trace_count
+        engine.plan_batch(gen.draw(16))          # new shape: one retrace
+        t16 = engine.trace_count
+        assert t16 > t8
+        engine.plan_batch(gen.draw(16))
+        engine.plan_batch(gen.draw(8))           # both shapes now cached
+        assert engine.trace_count == t16
+
+    def test_periodic_replanner_zero_retraces(self):
+        engine, base, _ = self._setup()
+        gen = ScenarioGenerator(base, pos_sigma_m=1.0, seed=0)
+        rp = PeriodicReplanner(engine, gen, period=3, n_scenarios=8)
+        for f in range(12):
+            rp.tick(f)
+        assert rp.refreshes == 4
+        assert rp.retraces == 0
+        assert rp.last_refresh_s > 0.0
+
+    def test_contingency_refresh_reuses_compiled_plan(self):
+        engine, base, _ = self._setup()
+        table = ContingencyTable(engine, base, source=0)
+        traces = engine.trace_count
+        nominal = table.plans[None].assign
+        table.refresh(base + 0.25, source=0)
+        assert engine.trace_count == traces
+        assert len(table.plans[None].assign) == len(nominal)
