@@ -73,14 +73,18 @@ def build_case(batch: int, uavs: int, layers: int, seed: int = 0,
 
 
 def _time_batched(fn, args, repeats: int):
-    """-> ({first-call, steady-state, throughput}, assign, latency)."""
+    """-> ({first-call, steady-state, throughput}, assign, latency).
+
+    Every timed region ends with ``jax.block_until_ready``: JAX dispatches
+    asynchronously, so stopping the clock at the Python return would time
+    the dispatch, not the solve (see ``bench_kernels.timeit``)."""
     t0 = time.perf_counter()
-    assign, latency = fn(*args)
+    assign, latency = jax.block_until_ready(fn(*args))
     first = time.perf_counter() - t0
     steady = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        assign, latency = fn(*args)
+        assign, latency = jax.block_until_ready(fn(*args))
         steady.append(time.perf_counter() - t0)
     batch = args[7].shape[0]
     steady_s = float(np.median(steady))

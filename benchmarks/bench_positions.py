@@ -1,0 +1,263 @@
+"""Benchmark: batched device-side P2 vs the scalar position solver, plus the
+fully fused P1->P2->P3 plan.
+
+Two sections, one JSON (``BENCH_positions.json``):
+
+* ``positions`` — ``solve_positions_batched`` over B scenarios in one jit
+  call vs a Python loop of ``solve_positions_legacy`` (the host-repair
+  scalar path a per-scenario replanner pays today: a fresh jitted GD scan
+  plus a NumPy argmin push-apart loop per call, timed on a sample and
+  extrapolated).  Includes a U = 32, B = 256 case that was previously
+  impractical scenario-by-scenario.
+* ``plan_e2e`` — the whole planning tick: a ``ScenarioEngine`` built with a
+  ``PositionSpec`` runs P2 -> P1 -> rates -> chain DP -> used-links
+  tightening in ONE fused jit call, compared against a Python loop over
+  ``LLHRPlanner`` with ``optimize_positions=True`` (P2 on host per
+  scenario).  Zero retraces across frames is asserted, replanner-style.
+
+All timed regions end with ``jax.block_until_ready`` (async dispatch must
+not stop the clock early).  Feasibility (2R separation, coverage) is
+hard-asserted; at full size the >= 50x batched-vs-scalar throughput target
+is too.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_positions.py
+        [--batch 256] [--uavs 8] [--steps 300] [--smoke]
+        [--json BENCH_positions.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+import jax
+
+from repro.configs.lenet import LENET
+from repro.core import (LLHRPlanner, RadioChannel, RadioParams, chain_links,
+                        cnn_cost, make_devices, solve_chain_dp,
+                        solve_positions_batched, solve_positions_legacy)
+from repro.core.positions import hex_init
+from repro.runtime.scenario_engine import (PositionSpec, ScenarioEngine,
+                                           ScenarioGenerator)
+
+PARAMS = RadioParams()
+CH = RadioChannel(PARAMS)
+
+
+def _inits(batch: int, uavs: int, radius: float, seed: int = 0) -> np.ndarray:
+    """Jittered hex packings — the initialization a mobility replan sees."""
+    return np.stack([hex_init(uavs, 2.0 * radius, jitter=radius / 4,
+                              seed=seed + i) for i in range(batch)])
+
+
+def _feasibility(positions: np.ndarray, radius: float) -> Dict:
+    d = np.sqrt(((positions[:, :, None] - positions[:, None, :]) ** 2)
+                .sum(-1))
+    d[:, np.eye(positions.shape[1], dtype=bool)] = np.inf
+    return {"min_separation_m": float(d.min()),
+            "required_separation_m": 2.0 * radius,
+            "separation_ok": bool(d.min() >= 2.0 * radius - 0.5)}
+
+
+def bench_positions(batch: int, uavs: int, steps: int, radius: float,
+                    repeats: int, sample: int) -> Dict:
+    pos0 = _inits(batch, uavs, radius)
+    links = chain_links(uavs)
+
+    t0 = time.perf_counter()
+    sol = solve_positions_batched(pos0, PARAMS, radius=radius, links=links,
+                                  steps=steps)
+    jax.block_until_ready(sol.positions)
+    first = time.perf_counter() - t0
+    steady = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        sol = solve_positions_batched(pos0, PARAMS, radius=radius,
+                                      links=links, steps=steps)
+        jax.block_until_ready(sol.positions)
+        steady.append(time.perf_counter() - t0)
+    steady_s = float(np.median(steady))
+
+    # scalar baseline: legacy host-repair solve per scenario (each call
+    # retraces its own GD scan — exactly what a per-scenario replanner pays)
+    n = min(sample, batch)
+    t0 = time.perf_counter()
+    for i in range(n):
+        legacy = solve_positions_legacy(uavs, CH, radius=radius, links=links,
+                                        steps=steps, seed=i)
+    per_scenario = (time.perf_counter() - t0) / n
+    assert legacy.max_violation < 0.5
+
+    return {
+        "batched": {"first_call_s": first, "steady_s": steady_s,
+                    "scenarios_per_s": batch / steady_s},
+        "scalar": {"per_scenario_s": per_scenario,
+                   "scenarios_per_s": 1.0 / per_scenario, "sampled": n},
+        "speedup_vs_scalar": per_scenario * batch / steady_s,
+        "feasibility": {**_feasibility(sol.positions, radius),
+                        "max_violation_m": float(sol.max_violation.max())},
+    }
+
+
+def bench_big_case(batch: int, uavs: int, steps: int, radius: float,
+                   repeats: int) -> Dict:
+    """U = 32 swarms at fleet batch — impractical scenario-by-scenario."""
+    pos0 = _inits(batch, uavs, radius, seed=7)
+    t0 = time.perf_counter()
+    sol = solve_positions_batched(pos0, PARAMS, radius=radius, steps=steps)
+    jax.block_until_ready(sol.positions)
+    first = time.perf_counter() - t0
+    steady = []
+    for _ in range(max(1, repeats // 2)):
+        t0 = time.perf_counter()
+        sol = solve_positions_batched(pos0, PARAMS, radius=radius,
+                                      steps=steps)
+        jax.block_until_ready(sol.positions)
+        steady.append(time.perf_counter() - t0)
+    steady_s = float(np.median(steady))
+    return {"batch": batch, "uavs": uavs, "steps": steps,
+            "first_call_s": first, "steady_s": steady_s,
+            "scenarios_per_s": batch / steady_s,
+            "feasibility": _feasibility(sol.positions, radius)}
+
+
+def bench_plan_e2e(batch: int, uavs: int, steps: int, radius: float,
+                   frames: int, sample: int) -> Dict:
+    """The fused P1->P2->P3 plan vs a host-side LLHRPlanner loop."""
+    mc = cnn_cost(LENET)
+    devs = make_devices(uavs)
+    base = hex_init(uavs, 2.0 * radius, jitter=radius / 4, seed=0)
+    spec = PositionSpec(steps=steps, radius=radius)
+    engine = ScenarioEngine(CH, devs, mc, position_spec=spec)
+    gen = ScenarioGenerator(base, pos_sigma_m=radius / 10, seed=0)
+
+    def plan_blocking(scen):
+        plan = engine.plan_batch(scen)
+        jax.block_until_ready((plan.latency, plan.positions, plan.power))
+        return plan
+
+    t0 = time.perf_counter()
+    plan = plan_blocking(gen.draw(batch))
+    first = time.perf_counter() - t0
+    traces_after_first = engine.trace_count
+    frame_s = []
+    for _ in range(frames):
+        t0 = time.perf_counter()
+        plan = plan_blocking(gen.draw(batch))
+        frame_s.append(time.perf_counter() - t0)
+    steady_s = float(np.median(frame_s))
+    retraces = engine.trace_count - traces_after_first
+
+    # scalar loop: LLHRPlanner solves P2 on host then P1/P3 per scenario
+    planner = LLHRPlanner(CH, radius=radius,
+                          placement_solver=solve_chain_dp,
+                          position_steps=steps)
+    n = min(sample, batch)
+    t0 = time.perf_counter()
+    for i in range(n):
+        planner.seed = i
+        p, _ = planner.plan(mc, devs, [0])
+    per_scenario = (time.perf_counter() - t0) / n
+
+    return {
+        "first_call_s": first, "steady_s": steady_s,
+        "scenarios_per_s": batch / steady_s,
+        "retraces_after_first": retraces,
+        "scalar_per_scenario_s": per_scenario,
+        "speedup_vs_scalar_planner": per_scenario * batch / steady_s,
+        "n_feasible": int(np.isfinite(plan.latency).sum()),
+        "feasibility": _feasibility(plan.positions, radius),
+    }
+
+
+def run(batch: int = 256, uavs: int = 8, steps: int = 300,
+        radius: float = 20.0, big_batch: int = 256, big_uavs: int = 32,
+        repeats: int = 5, sample: int = 8, frames: int = 5,
+        smoke: bool = False) -> Dict:
+    result: Dict = {
+        "benchmark": "positions_p2",
+        "backend": jax.default_backend(),
+        "config": {"batch": batch, "uavs": uavs, "steps": steps,
+                   "radius": radius, "repeats": repeats, "sample": sample,
+                   "frames": frames, "smoke": smoke},
+    }
+
+    pos = bench_positions(batch, uavs, steps, radius, repeats, sample)
+    result["positions"] = pos
+    print(f"batched : first {pos['batched']['first_call_s']:6.2f}s  steady "
+          f"{pos['batched']['steady_s'] * 1e3:8.1f} ms  "
+          f"({pos['batched']['scenarios_per_s']:9.1f} scen/s)")
+    print(f"scalar  : {pos['scalar']['scenarios_per_s']:9.1f} scen/s "
+          f"(legacy solve_positions, sampled {pos['scalar']['sampled']})")
+    print(f"speedup : {pos['speedup_vs_scalar']:.1f}x batched vs scalar; "
+          f"min sep {pos['feasibility']['min_separation_m']:.2f} m "
+          f"(need {pos['feasibility']['required_separation_m']:.0f})")
+
+    big = bench_big_case(big_batch, big_uavs, steps, radius, repeats)
+    result["big_case"] = big
+    print(f"big     : U={big_uavs} B={big_batch}: first "
+          f"{big['first_call_s']:.2f}s, steady {big['steady_s'] * 1e3:.1f} ms"
+          f" ({big['scenarios_per_s']:.1f} scen/s) — impractical "
+          f"scenario-by-scenario")
+
+    e2e = bench_plan_e2e(batch, uavs, steps, radius, frames, sample)
+    result["plan_e2e"] = e2e
+    print(f"e2e     : fused P2->P1->P3 first {e2e['first_call_s']:.2f}s, "
+          f"steady {e2e['steady_s'] * 1e3:.1f} ms/batch "
+          f"({e2e['scenarios_per_s']:.1f} scen/s), "
+          f"{e2e['retraces_after_first']} retraces; "
+          f"{e2e['speedup_vs_scalar_planner']:.1f}x vs LLHRPlanner loop")
+
+    assert pos["feasibility"]["separation_ok"], \
+        "batched P2 violated the 2R separation constraint"
+    assert big["feasibility"]["separation_ok"], \
+        "big-case P2 violated the 2R separation constraint"
+    assert e2e["retraces_after_first"] == 0, \
+        "fused plan retraced across replanner frames"
+    if not smoke:
+        assert pos["speedup_vs_scalar"] >= 50.0, \
+            "speedup target (50x batched vs scalar P2) missed"
+        # the scalar planner baseline itself benefits from the batched P2
+        # (solve_positions is its B=1 slice now), so the fused-plan target
+        # matches the engine benchmark's 10x bar
+        assert e2e["speedup_vs_scalar_planner"] >= 10.0, \
+            "speedup target (10x fused plan vs scalar planner) missed"
+        print("PASS: >=50x batched-vs-scalar, 0 retraces, separation held")
+    return result
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--uavs", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--radius", type=float, default=20.0)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--sample", type=int, default=8,
+                    help="scenarios timed on the scalar paths (extrapolated)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run; no speedup asserts")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the result dict to this path")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cfg = dict(batch=16, uavs=4, steps=50, big_batch=8, big_uavs=16,
+                   repeats=2, sample=2, frames=3, smoke=True)
+    else:
+        cfg = dict(batch=args.batch, uavs=args.uavs, steps=args.steps,
+                   radius=args.radius, repeats=args.repeats,
+                   sample=args.sample)
+    result = run(**cfg)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

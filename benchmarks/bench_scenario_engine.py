@@ -45,13 +45,21 @@ def run(batch: int = 256, uavs: int = 8, scalar_sample: int = 64,
     batch_scen = gen.draw(batch)
 
     # --- batched engine (one-time jit compile reported apart) --------------
+    # timed regions end with jax.block_until_ready so asynchronous dispatch
+    # can never stop the clock early (plan_batch materializes NumPy today,
+    # but the timing must stay honest if it ever returns device arrays)
+    def plan_blocking(scen):
+        plan = engine.plan_batch(scen)
+        jax.block_until_ready((plan.latency, plan.assign, plan.power))
+        return plan
+
     engine = ScenarioEngine(ch, devs, mc)
     t0 = time.perf_counter()
-    plan = engine.plan_batch(batch_scen)
+    plan = plan_blocking(batch_scen)
     compile_and_run = time.perf_counter() - t0
     traces_after_first = engine.trace_count
     t0 = time.perf_counter()
-    plan = engine.plan_batch(batch_scen)
+    plan = plan_blocking(batch_scen)
     batched_s = time.perf_counter() - t0
     batched_rate = batch / batched_s
 
@@ -60,7 +68,7 @@ def run(batch: int = 256, uavs: int = 8, scalar_sample: int = 64,
     for f in range(frames):
         scen = gen.draw(batch)
         t0 = time.perf_counter()
-        engine.plan_batch(scen)
+        plan_blocking(scen)
         frame_s.append(time.perf_counter() - t0)
     retraces = engine.trace_count - traces_after_first
 

@@ -4,14 +4,16 @@ Modes:
 
 * (default)        — one module per paper figure + kernel microbench,
                      printing ``name,us_per_call,derived`` CSV.
-* ``--bench``      — the perf pipeline: runs ``bench_placement`` and
-                     ``bench_scenario_engine`` at full size and writes
-                     ``BENCH_placement.json`` / ``BENCH_scenario_engine.json``
+* ``--bench``      — the perf pipeline: runs ``bench_placement``,
+                     ``bench_scenario_engine`` and ``bench_positions`` at
+                     full size and writes ``BENCH_placement.json`` /
+                     ``BENCH_scenario_engine.json`` / ``BENCH_positions.json``
                      (wall-clock, compile time, speedups vs the NumPy
-                     oracle and the PR 1 tracer) into ``--out``.
+                     oracle, the PR 1 tracer, and the scalar P2 loop)
+                     into ``--out``.
 * ``--smoke``      — same pipeline at tiny B/U/L (CI-sized, CPU-friendly);
-                     agreement and zero-retrace asserts stay on, speedup
-                     asserts are skipped.
+                     agreement, feasibility and zero-retrace asserts stay
+                     on, speedup asserts are skipped.
 
 The dry-run/roofline benchmark (reports/dryrun) is driven separately by
 scripts/run_dryrun_all.sh since it needs a 512-device process.
@@ -38,7 +40,8 @@ def run_figures() -> None:
 
 
 def run_bench(out_dir: str, smoke: bool) -> None:
-    from benchmarks import bench_placement, bench_scenario_engine
+    from benchmarks import (bench_placement, bench_positions,
+                            bench_scenario_engine)
     os.makedirs(out_dir, exist_ok=True)
     flags = ["--smoke"] if smoke else []
     bench_placement.main(
@@ -46,6 +49,8 @@ def run_bench(out_dir: str, smoke: bool) -> None:
     bench_scenario_engine.main(
         flags + ["--json",
                  os.path.join(out_dir, "BENCH_scenario_engine.json")])
+    bench_positions.main(
+        flags + ["--json", os.path.join(out_dir, "BENCH_positions.json")])
 
 
 def main(argv=None) -> None:

@@ -6,12 +6,15 @@ from repro.core.placement import (Device, PlacementProblem,
                                   PlacementSolution, solve_bnb, solve_brute,
                                   solve_chain_dp, solve_chain_dp_minmax,
                                   solve_greedy, solve_random)
-from repro.core.batch import (BatchPowerSolution, pairwise_dist_batched,
-                              power_threshold_batched, rate_matrix_batched,
-                              solve_chain_dp_batched, solve_power_batched)
+from repro.core.batch import (BatchPositionSolution, BatchPowerSolution,
+                              chain_links, links_from_assignment_batched,
+                              pairwise_dist_batched, power_threshold_batched,
+                              rate_matrix_batched, solve_chain_dp_batched,
+                              solve_positions_batched, solve_power_batched)
 from repro.core.planner import LLHRPlanner, Plan
 from repro.core.power import PowerSolution, solve_power
 from repro.core.positions import (chain_oracle, hex_init, solve_positions,
+                                  solve_positions_legacy,
                                   assign_stages_to_torus)
 from repro.core.baselines import HeuristicPlanner, RandomPlanner
 from repro.core.swarm import (SwarmSim, average_latency, average_power,
@@ -25,10 +28,14 @@ __all__ = [
     "Device", "PlacementProblem", "PlacementSolution",
     "solve_bnb", "solve_brute", "solve_chain_dp", "solve_chain_dp_minmax", "solve_greedy",
     "solve_random", "LLHRPlanner", "Plan", "PowerSolution", "solve_power",
-    "chain_oracle", "hex_init", "solve_positions", "assign_stages_to_torus",
+    "chain_oracle", "hex_init", "solve_positions", "solve_positions_legacy",
+    "assign_stages_to_torus",
     "HeuristicPlanner", "RandomPlanner", "SwarmSim", "average_latency",
     "average_power", "make_devices", "StagePlan", "pipeline_efficiency",
     "plan_pipeline", "stage_devices",
-    "BatchPowerSolution", "pairwise_dist_batched", "power_threshold_batched",
-    "rate_matrix_batched", "solve_chain_dp_batched", "solve_power_batched",
+    "BatchPositionSolution", "BatchPowerSolution", "chain_links",
+    "links_from_assignment_batched", "pairwise_dist_batched",
+    "power_threshold_batched", "rate_matrix_batched",
+    "solve_chain_dp_batched", "solve_positions_batched",
+    "solve_power_batched",
 ]

@@ -9,6 +9,8 @@ Everything here mirrors an existing scalar implementation elementwise:
   (eq. 5 at the solved powers, zeroed on infeasible links)
 * ``solve_chain_dp_batched``                              <-> ``placement.solve_chain_dp``
   (contiguous-block chain DP, P3 fast path)
+* ``solve_positions_batched``                             <-> ``positions.solve_positions_legacy``
+  (P2 projected-gradient descent on eq. 9, separation repair on device)
 
 The scalar NumPy versions stay the reference oracles; the batched paths are
 tested elementwise against them (``tests/test_batch_engine.py``) and power the
@@ -129,6 +131,198 @@ def rate_matrix_batched(dist: jnp.ndarray, power: jnp.ndarray,
     rate = params.bandwidth_hz * jnp.log2(1.0 + p_rx / params.noise_watts)
     rate = jnp.where(link_feasible, rate, 0.0)
     return jnp.where(jnp.eye(U, dtype=bool), jnp.inf, rate)
+
+
+# ---------------------------------------------------------------------------
+# Batched P2 — UAV positions (eq. 8-9), repair on device
+# ---------------------------------------------------------------------------
+
+
+def position_coeff(params: RadioParams) -> float:
+    """The eq. (9) per-link power weight: sigma^2/h0 * (2^(K/(B tau)) - 1).
+    Minimizing sum of coeff * d^2 over links is the paper's P2 objective."""
+    return (params.noise_watts / params.h0) * \
+        (math.exp(params.packet_bits * math.log(2.0) /
+                  (params.bandwidth_hz * params.tau)) - 1.0)
+
+
+def coverage_radius(n_uavs: int, radius: float) -> float:
+    """Coverage-circle radius (eq. 8c) big enough to hold a 2R-separated
+    packing of ``n_uavs`` — the same bound the legacy scalar solver uses."""
+    return max(radius, 2.0 * radius * (math.sqrt(float(n_uavs)) + 1.0))
+
+
+def chain_links(n_uavs: int,
+                order: Optional[Sequence[int]] = None) -> np.ndarray:
+    """[U, U] bool chain-links mask i -> i+1 (walked in ``order`` if given) —
+    the placement pipeline's shape, and P2's default topology."""
+    links = np.zeros((n_uavs, n_uavs), dtype=bool)
+    idx = list(order) if order is not None else list(range(n_uavs))
+    for a, b in zip(idx[:-1], idx[1:]):
+        links[a, b] = True
+    return links
+
+
+@partial(jax.jit, static_argnames=("steps", "repair_iters"))
+def _positions_pgd(pos0: jnp.ndarray, links: jnp.ndarray, coeff: jnp.ndarray,
+                   lr: jnp.ndarray, two_r: jnp.ndarray, cover_r: jnp.ndarray,
+                   center: jnp.ndarray, steps: int, repair_iters: int):
+    """Projected-gradient P2 over a scenario batch, fully on device.
+
+    Forward pass: ``steps`` iterations of normalized gradient descent on the
+    eq. (9) objective plus the smooth separation hinge (eq. 8d), each step
+    projected onto the coverage circle (eq. 8c).  The scan carries the
+    best-so-far iterate per scenario, so the emitted objective trace is
+    monotonically non-increasing BY CONSTRUCTION and the returned solution is
+    the trajectory argmin (an anytime solver), not just the last iterate.
+
+    Repair pass: the legacy host-side NumPy argmin loop
+    (``positions.solve_positions_legacy``) becomes a second fixed-length
+    ``lax.scan``: each iteration finds the worst-separated pair PER SCENARIO
+    and pushes it symmetrically to 2R + 2e-3 about its midpoint, guarded to a
+    no-op once the minimum pairwise distance clears 2R.  No host round-trip.
+
+    Args: pos0 [B, U, 2] initialization; links [B, U, U] bool (symmetrized
+    here); coeff/lr/two_r/cover_r scalars; center [B, 2] coverage-circle
+    centers.  Returns (positions [B, U, 2], link objective [B], residual
+    separation violation [B], objective trace [B, steps]).
+    """
+    U = pos0.shape[-2]
+    B = pos0.shape[0]
+    eye = jnp.eye(U, dtype=bool)
+    links = links | jnp.swapaxes(links, -1, -2)
+
+    def objective(pos):                                             # [B]
+        d2 = ((pos[..., :, None, :] - pos[..., None, :, :]) ** 2).sum(-1)
+        obj = jnp.where(links, coeff * d2, 0.0).sum((-2, -1)) / 2.0
+        viol = jnp.maximum(two_r ** 2 - d2, 0.0)
+        pen = jnp.where(eye, 0.0, viol ** 2).sum((-2, -1))
+        return obj + 10.0 * coeff * pen
+
+    def project(pos):
+        rel = pos - center[:, None, :]
+        r = jnp.linalg.norm(rel, axis=-1, keepdims=True)
+        return center[:, None, :] + \
+            rel * jnp.minimum(1.0, cover_r / jnp.maximum(r, 1e-9))
+
+    def gd(carry, _):
+        pos, best_pos, best_obj = carry
+        g = jax.grad(lambda p: objective(p).sum())(pos)
+        gn = jnp.sqrt((g ** 2).sum((-2, -1), keepdims=True))
+        pos = project(pos - lr * g / (gn + 1e-12))
+        obj = objective(pos)
+        better = obj < best_obj
+        best_pos = jnp.where(better[:, None, None], pos, best_pos)
+        best_obj = jnp.minimum(obj, best_obj)
+        return (pos, best_pos, best_obj), best_obj
+
+    pos0 = project(pos0)
+    (_, pos, _), trace = jax.lax.scan(gd, (pos0, pos0, objective(pos0)),
+                                      None, length=steps)
+
+    rows = jnp.arange(B)
+
+    def repair(pos, _):
+        diff = pos[:, :, None, :] - pos[:, None, :, :]
+        d = jnp.sqrt((diff ** 2).sum(-1))
+        d = jnp.where(eye, jnp.inf, d)
+        flat = d.reshape(B, -1)
+        arg = jnp.argmin(flat, -1)
+        i, k = arg // U, arg % U
+        pi, pk = pos[rows, i], pos[rows, k]
+        mid = (pi + pk) / 2.0
+        dir_ = pi - pk
+        nrm = jnp.linalg.norm(dir_, axis=-1, keepdims=True)
+        # coincident pair: push along a fixed axis instead of collapsing
+        dir_ = jnp.where(nrm < 1e-6, jnp.array([1.0, 0.0]), dir_ / (nrm + 1e-9))
+        push = dir_ * (two_r / 2.0 + 1e-3)
+        need = (flat.min(-1) < two_r - 1e-6)[:, None]
+        pos = pos.at[rows, i].set(jnp.where(need, mid + push, pi))
+        pos = pos.at[rows, k].set(jnp.where(need, mid - push, pk))
+        return pos, None
+
+    pos, _ = jax.lax.scan(repair, pos, None, length=repair_iters)
+    d2 = ((pos[:, :, None, :] - pos[:, None, :, :]) ** 2).sum(-1)
+    d = jnp.sqrt(jnp.where(eye, jnp.inf, d2))
+    viol = jnp.maximum(0.0, two_r - d.min((-2, -1)))
+    link_obj = jnp.where(links, coeff * d2, 0.0).sum((-2, -1)) / 2.0
+    return pos, link_obj, viol, trace.T
+
+
+@dataclass(frozen=True)
+class BatchPositionSolution:
+    """Batched twin of ``positions.PositionSolution``.
+
+    ``objective`` is the raw eq. (9) link objective after repair;
+    ``objective_trace`` is the penalized objective of the best-so-far iterate
+    per GD step — monotonically non-increasing (property-tested)."""
+
+    positions: np.ndarray        # [B, U, 2]
+    objective: np.ndarray        # [B]
+    max_violation: np.ndarray    # [B] residual separation violation (m)
+    objective_trace: np.ndarray  # [B, steps]
+    iterations: int
+
+
+def solve_positions_batched(init_positions: np.ndarray,
+                            params: RadioParams,
+                            radius: float = 20.0,
+                            links: Optional[np.ndarray] = None,
+                            steps: int = 800,
+                            lr: float = 0.5,
+                            repair_iters: int = 50,
+                            center: Optional[Tuple[float, float]] = None
+                            ) -> BatchPositionSolution:
+    """Batched P2 (eq. 8-9): projected gradient descent over a [B, U, 2]
+    batch of initializations with the separation repair on device.
+
+    ``links``: [U, U] or [B, U, U] bool transfer topology (default: the
+    chain i -> i+1, e.g. from ``chain_links`` or a placement via
+    ``links_from_assignment_batched``).  ``center``: coverage-circle center
+    shared by the batch; default is each scenario's initialization centroid.
+    ``positions.solve_positions`` is exactly the B = 1 slice of this path.
+    """
+    if hasattr(params, "params"):            # accept a RadioChannel too
+        params = params.params
+    pos0 = jnp.asarray(init_positions, jnp.float32)
+    B, U = pos0.shape[0], pos0.shape[1]
+    if links is None:
+        links = chain_links(U)
+    links = np.asarray(links, dtype=bool)
+    if links.ndim == 2:
+        links = np.broadcast_to(links, (B, U, U))
+    if center is None:
+        center_j = pos0.mean(axis=1)
+    else:
+        center_j = jnp.broadcast_to(jnp.asarray(center, jnp.float32), (B, 2))
+    pos, obj, viol, trace = _positions_pgd(
+        pos0, jnp.asarray(links), jnp.float32(position_coeff(params)),
+        jnp.float32(lr), jnp.float32(2.0 * radius),
+        jnp.float32(coverage_radius(U, radius)), center_j,
+        steps, repair_iters)
+    return BatchPositionSolution(
+        positions=np.asarray(pos, np.float64),
+        objective=np.asarray(obj, np.float64),
+        max_violation=np.asarray(viol, np.float64),
+        objective_trace=np.asarray(trace, np.float64),
+        iterations=steps)
+
+
+def links_from_assignment_batched(assign: jnp.ndarray, source: jnp.ndarray,
+                                  n_uavs: int) -> jnp.ndarray:
+    """[B, L] chain-DP assignment (+ [B] source) -> [B, U, U] bool mask of
+    the inter-UAV transfers each placement performs: source -> first layer's
+    device, then every device change along the chain.  Infeasible scenarios
+    (assign -1) use no links.  Pure ``jnp`` — traceable inside the fused
+    plan, and the P2 topology for re-optimizing positions to a placement."""
+    B, L = assign.shape
+    prev = jnp.concatenate([source[:, None], assign[:, :-1]], axis=1)  # [B,L]
+    valid = (prev >= 0) & (assign >= 0) & (prev != assign)
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, L))
+    a = jnp.clip(prev, 0, n_uavs - 1)
+    b = jnp.clip(assign, 0, n_uavs - 1)
+    hits = jnp.zeros((B, n_uavs, n_uavs), jnp.int32)
+    return hits.at[rows, a, b].add(valid.astype(jnp.int32)) > 0
 
 
 # ---------------------------------------------------------------------------
@@ -425,7 +619,10 @@ def _reconstruct_assignments(latency: np.ndarray, s_best: np.ndarray,
 
 
 __all__ = [
-    "BatchPowerSolution", "pairwise_dist_batched", "link_gain_batched",
-    "power_threshold_batched", "solve_power_batched", "rate_matrix_batched",
-    "solve_chain_dp_batched", "solve_chain_dp_batched_unrolled",
+    "BatchPowerSolution", "BatchPositionSolution", "pairwise_dist_batched",
+    "link_gain_batched", "power_threshold_batched", "solve_power_batched",
+    "rate_matrix_batched", "solve_chain_dp_batched",
+    "solve_chain_dp_batched_unrolled", "solve_positions_batched",
+    "links_from_assignment_batched", "chain_links", "position_coeff",
+    "coverage_radius",
 ]

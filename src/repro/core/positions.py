@@ -9,8 +9,13 @@ This is a QCQP in the pairwise distances.  We solve it with projected
 gradient descent in JAX (the objective and both constraint projections are
 differentiable almost everywhere), initialized from a hexagonal packing —
 plus an analytic oracle for the chain topology (collinear at exactly 2R) used
-by the tests.  A discrete variant assigns stages to torus coordinates for
-the TPU analogue (quadratic assignment, greedy + 2-opt).
+by the tests.  ``solve_positions`` is the B = 1 slice of the batched
+device-side path (``repro.core.batch.solve_positions_batched``: GD scan +
+fixed-iteration pairwise push-apart repair, all in one jit call); the
+original host-repair implementation is kept as ``solve_positions_legacy``,
+the parity oracle.  A discrete variant assigns stages to torus coordinates
+for the TPU analogue (quadratic assignment: greedy + 2-opt seed, refined by
+budgeted branch-and-bound).
 """
 from __future__ import annotations
 
@@ -74,11 +79,43 @@ def solve_positions(n_uavs: int,
                     steps: int = 800,
                     lr: float = 0.5,
                     seed: int = 0) -> PositionSolution:
-    """Projected gradient descent on eq. (9).
+    """Projected gradient descent on eq. (9) — the B = 1 slice of the
+    batched device-side path.
 
     ``links``: [U,U] bool — which pairs exchange data (default: chain
     i -> i+1, the placement pipeline's shape).  Objective weight per link is
     the eq. (9) power coefficient; minimizing sum of coeff * d^2.
+
+    The whole solve — GD scan, coverage projection, AND the separation
+    repair — runs in one jit call on device
+    (``batch.solve_positions_batched``); there is no host-side repair loop
+    anymore.  ``solve_positions_legacy`` below keeps the original NumPy
+    push-apart implementation as the tests' parity oracle.
+    """
+    from repro.core.batch import solve_positions_batched
+    pos0 = hex_init(n_uavs, 2.0 * radius, area_center, jitter=0.5, seed=seed)
+    sol = solve_positions_batched(
+        pos0[None], channel.params, radius=radius,
+        links=None if links is None else np.asarray(links, dtype=bool)[None],
+        steps=steps, lr=lr, center=area_center)
+    return PositionSolution(positions=sol.positions[0],
+                            objective=float(sol.objective[0]),
+                            iterations=steps,
+                            max_violation=float(sol.max_violation[0]))
+
+
+def solve_positions_legacy(n_uavs: int,
+                           channel: RadioChannel,
+                           radius: float = 20.0,
+                           area_center: Tuple[float, float] = (0.0, 0.0),
+                           links: Optional[np.ndarray] = None,
+                           steps: int = 800,
+                           lr: float = 0.5,
+                           seed: int = 0) -> PositionSolution:
+    """The original one-scenario implementation: jitted GD scan followed by
+    a HOST-SIDE NumPy argmin push-apart repair loop.  Kept verbatim as the
+    parity oracle for the batched path (and the benchmark baseline) — new
+    code should call ``solve_positions``.
     """
     U = n_uavs
     if links is None:
@@ -150,11 +187,25 @@ def chain_oracle(n: int, radius: float,
 
 def assign_stages_to_torus(n_stages: int, traffic: np.ndarray,
                            channel: ICIChannel,
-                           sweeps: int = 4) -> List[Tuple[int, int]]:
+                           sweeps: int = 4,
+                           exact_cutoff: int = 8,
+                           node_budget: int = 200_000
+                           ) -> List[Tuple[int, int]]:
     """Place ``n_stages`` stage groups on the pod torus minimizing
-    hop-weighted traffic (quadratic assignment; greedy + pairwise 2-opt).
+    hop-weighted traffic (quadratic assignment).
 
     ``traffic[i, k]`` = bytes/step stage i sends to stage k.
+
+    A greedy snake walk + pairwise 2-opt builds the incumbent; for
+    ``n_stages <= exact_cutoff`` it is then refined by depth-first
+    branch-and-bound over stage -> coordinate permutations.  Transfer costs
+    are nonnegative, so a prefix's accumulated cost is an admissible lower
+    bound — any prefix already at the incumbent cost is pruned, which is
+    what keeps the O(n!) permutation space from being enumerated.  Stage 0
+    is pinned to the seed's coordinate (torus translations preserve hop
+    counts, so this loses no generality), and the search is hard-capped at
+    ``node_budget`` candidate evaluations: a large call can no longer hang —
+    it returns the best placement found so far, never worse than the seed.
     """
     tx, ty = channel.params.torus
     coords = [(x, y) for x in range(tx) for y in range(ty)]
@@ -188,4 +239,49 @@ def assign_stages_to_torus(n_stages: int, traffic: np.ndarray,
                     improved = True
         if not improved:
             break
+    if n_stages > exact_cutoff or n_stages < 2:
+        return list(placement)
+
+    # --- branch-and-bound refinement (prefix cost prunes permutations) ----
+    pair_cache: dict = {}
+
+    def pair_cost(i: int, j: int, ci: Tuple[int, int],
+                  cj: Tuple[int, int]) -> float:
+        key = (i, j, ci, cj)
+        c = pair_cache.get(key)
+        if c is None:
+            c = 0.0
+            if traffic[i, j] > 0:
+                c += channel.transfer_time(traffic[i, j],
+                                           channel.hops(ci, cj))
+            if traffic[j, i] > 0:
+                c += channel.transfer_time(traffic[j, i],
+                                           channel.hops(cj, ci))
+            pair_cache[key] = c
+        return c
+
+    budget = node_budget
+    root = placement[0]
+    stack: List[Tuple[List[Tuple[int, int]], float]] = [([root], 0.0)]
+    while stack and budget > 0:
+        prefix, pc = stack.pop()
+        j = len(prefix)
+        if j == n_stages:
+            if pc < best - 1e-12:
+                best, placement = pc, list(prefix)
+            continue
+        used = set(prefix)
+        cands = []
+        for c in coords:
+            if c in used:
+                continue
+            budget -= 1
+            inc = sum(pair_cost(i, j, prefix[i], c) for i in range(j))
+            if pc + inc < best - 1e-12:
+                cands.append((inc, c))
+            if budget <= 0:
+                break
+        cands.sort(reverse=True)                 # pop cheapest child first
+        for inc, c in cands:
+            stack.append((prefix + [c], pc + inc))
     return list(placement)

@@ -132,9 +132,21 @@ class FaultTolerantRunner:
         ``ContingencyTable`` over a ``ScenarioEngine`` for the CURRENT
         survivor devices (the old engine is specialized to the old swarm)
         and re-arm the fast delegation path here.  For pure mobility
-        updates — same devices, new positions — ``ContingencyTable.refresh``
-        on the existing table is enough and costs no recompile."""
+        updates — same devices, new positions — ``on_mobility`` refreshes
+        the existing table in place and costs no recompile."""
         self.contingency = table
+
+    def on_mobility(self, positions, source: int = 0) -> None:
+        """Mobility update: refresh the precomputed failure table at newly
+        measured positions.  The refresh is a pure device-side re-execution
+        through the compiled-plan cache (no retrace), and when the table's
+        engine fuses P2 the measured positions are only an initialization —
+        every refreshed ``ContingencyPlan`` then carries device-optimized
+        survivor positions, so delegation never ships a position solve from
+        host."""
+        if self.contingency is not None and \
+                hasattr(self.contingency, "refresh"):
+            self.contingency.refresh(positions, source=source)
 
     def on_straggler(self, slow_names: Sequence[str]) -> object:
         """Demote straggler throughput and shift load away (re-plan)."""

@@ -11,9 +11,13 @@ placement.  This module provides:
 * ``ScenarioGenerator`` — Monte-Carlo draws around a nominal swarm state:
   Gaussian position jitter (mobility), i.i.d. UAV failures, log-normal
   shadowing on the channel gain, and a random capturing UAV per scenario.
-* ``ScenarioEngine``    — one jit-compiled pipeline running the batched P1
-  closed form, the eq. (5) rate matrix, and the batched chain-DP placement
-  (``repro.core.batch``) over the whole scenario axis at once.
+* ``ScenarioEngine``    — ONE jit-compiled pipeline running, fully on
+  device: (optionally) the batched P2 position solver from each scenario's
+  positions as initialization, the batched P1 closed form, the eq. (5) rate
+  matrix, the batched chain-DP placement + backtrack, and the used-links
+  power tightening (``repro.core.batch``) over the whole scenario axis at
+  once.  Construct with a ``PositionSpec`` to enable the fused P2 stage —
+  mobility replans then ship only initializations, never solved positions.
 * ``ContingencyTable``  — every single-UAV-failure plan precomputed in one
   engine call, so the fault-tolerance runner can delegate instantly instead
   of re-solving at failure time.
@@ -32,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import (_chain_dp_solve, pairwise_dist_batched,
+from repro.core.batch import (_chain_dp_solve, _positions_pgd, chain_links,
+                              coverage_radius, links_from_assignment_batched,
+                              pairwise_dist_batched, position_coeff,
                               power_threshold_batched, rate_matrix_batched,
                               solve_power_batched)
 from repro.core.channel import RadioChannel, RadioParams
@@ -213,12 +219,39 @@ class PlanFnCache:
 PLAN_FN_CACHE = PlanFnCache()
 
 
+@dataclass(frozen=True)
+class PositionSpec:
+    """Static P2 hyperparameters for the fused planner.
+
+    Part of the compiled-plan cache key: engines sharing (problem signature,
+    spec) share ONE compiled plan; changing any field compiles a new one.
+    """
+
+    steps: int = 300           # projected-gradient iterations
+    lr: float = 0.5            # normalized-gradient step size (m)
+    radius: float = 20.0       # UAV coverage radius R (eq. 8c/8d)
+    repair_iters: int = 50     # device-side push-apart iterations
+
+    def key(self) -> tuple:
+        return ("p2", self.steps, self.lr, self.radius, self.repair_iters)
+
+
 def _build_solve_fn(on_trace, *, params: RadioParams, compute, memory,
                     act_bits, input_bits, mem_cap, compute_cap, throughput,
-                    order: Tuple[int, ...]):
-    """One fused jit: positions -> P1 powers -> eq. (5) rates -> chain-DP
-    placement (solve + device-side backtrack).  Also returns the distances
-    and eq. (7) thresholds so the used-links tighten pass reuses them."""
+                    order: Tuple[int, ...],
+                    p2: Optional[PositionSpec] = None):
+    """One fused jit — the WHOLE planning tick on device:
+
+        (P2 positions from the input initializations, when ``p2`` is set)
+        -> pairwise distances -> P1 powers -> eq. (5) rates
+        -> chain-DP placement (solve + device-side backtrack)
+        -> used-links mask from the assignment -> tightened P1 powers.
+
+    Nothing crosses the host boundary between stages: the used-links
+    tightening (the scalar planner's ``min_power_for_placement``) consumes
+    the assignment straight from the DP backtrack via
+    ``links_from_assignment_batched``, and reuses the eq. (7) thresholds
+    computed for the first P1 pass."""
     compute = jnp.asarray(compute, jnp.float32)
     memory = jnp.asarray(memory, jnp.float32)
     act_bits = jnp.asarray(act_bits, jnp.float32)
@@ -226,9 +259,17 @@ def _build_solve_fn(on_trace, *, params: RadioParams, compute, memory,
     mem_cap = jnp.asarray(mem_cap, jnp.float32)
     compute_cap = jnp.asarray(compute_cap, jnp.float32)
     throughput = jnp.asarray(throughput, jnp.float32)
+    U = int(mem_cap.shape[0])
 
-    def solve(positions, source, active, gain_scale):
+    def solve(positions, source, active, gain_scale, p2_links):
         on_trace()
+        if p2 is not None:
+            positions, _, _, _ = _positions_pgd(
+                positions, p2_links,
+                jnp.float32(position_coeff(params)), jnp.float32(p2.lr),
+                jnp.float32(2.0 * p2.radius),
+                jnp.float32(coverage_radius(U, p2.radius)),
+                positions.mean(axis=1), p2.steps, p2.repair_iters)
         dist = pairwise_dist_batched(positions)
         th = power_threshold_batched(dist, params, gain_scale=gain_scale)
         pw = solve_power_batched(dist, params, active=active,
@@ -238,18 +279,12 @@ def _build_solve_fn(on_trace, *, params: RadioParams, compute, memory,
         assign, latency = _chain_dp_solve(
             compute, memory, act_bits, input_bits, mem_cap, compute_cap,
             throughput, rate, source, active, order)
-        return pw.power, rate, dist, th, assign, latency
+        used = links_from_assignment_batched(assign, source, U)
+        power = solve_power_batched(dist, params, links=used, active=active,
+                                    threshold_matrix=th).power
+        return positions, power, rate, assign, latency
 
     return jax.jit(solve)
-
-
-def _build_tighten_fn(on_trace, *, params: RadioParams):
-    def tighten(dist, threshold_matrix, links, active):
-        on_trace()
-        return solve_power_batched(dist, params, links=links, active=active,
-                                   threshold_matrix=threshold_matrix).power
-
-    return jax.jit(tighten)
 
 
 # ---------------------------------------------------------------------------
@@ -264,7 +299,12 @@ class BatchPlan:
     As in the scalar planner, ``rate`` (and hence ``latency``) comes from the
     all-feasible-links P1 solve, while ``power``/``total_power`` are the P1
     optimum tightened to the links each placement actually uses (a UAV that
-    transmits to nobody needs zero power — ``min_power_for_placement``)."""
+    transmits to nobody needs zero power — ``min_power_for_placement``).
+
+    ``positions`` are the positions the plan was priced at: the P2-optimized
+    ones when the engine carries a ``PositionSpec`` (the scenario positions
+    were only the initialization), otherwise the scenario positions
+    unchanged."""
 
     scenarios: ScenarioBatch
     power: np.ndarray          # [B, U] transmit powers on used links (W)
@@ -272,6 +312,7 @@ class BatchPlan:
     assign: np.ndarray         # [B, L] device id per layer (-1 = infeasible)
     latency: np.ndarray        # [B] end-to-end latency (s; inf = infeasible)
     total_power: np.ndarray    # [B]
+    positions: Optional[np.ndarray] = None   # [B, U, 2]
 
     @property
     def feasible(self) -> np.ndarray:
@@ -307,28 +348,34 @@ class BatchPlan:
 
 
 class ScenarioEngine:
-    """Vectorized LLHR fast path: batched P1 + eq. (5) + chain-DP placement.
+    """Vectorized LLHR fast path: (P2) + batched P1 + eq. (5) + chain-DP
+    placement + used-links power tightening.
 
-    One instance is specialized to a (channel, devices, model) triple.  The
-    whole positions -> powers -> rates -> placement (+ backtrack) pipeline
-    is ONE jit call, compiled at most once per static problem signature per
-    process: engines resolve their callables through ``PLAN_FN_CACHE`` (or
-    the ``plan_cache`` passed in), so rebuilding an engine — or planning
-    from a different wrapper such as ``ContingencyTable`` — reuses the
-    already-compiled plan.
+    One instance is specialized to a (channel, devices, model) triple — plus,
+    optionally, a ``PositionSpec``: when given, the compiled plan FUSES the
+    batched P2 position solver in front of P1, so ``plan_batch`` treats each
+    scenario's positions as an initialization and optimizes them on device.
+    The whole positions -> powers -> rates -> placement (+ backtrack) ->
+    tightened powers pipeline is ONE jit call, compiled at most once per
+    static problem signature per process: engines resolve their callables
+    through ``PLAN_FN_CACHE`` (or the ``plan_cache`` passed in), so
+    rebuilding an engine — or planning from a different wrapper such as
+    ``ContingencyTable`` — reuses the already-compiled plan.
     """
 
     def __init__(self, channel: RadioChannel | RadioParams,
                  devices: Sequence[Device], model: ModelCost,
                  device_order: Optional[Sequence[int]] = None,
                  act_scale: float = 1.0,
-                 plan_cache: Optional[PlanFnCache] = None):
+                 plan_cache: Optional[PlanFnCache] = None,
+                 position_spec: Optional[PositionSpec] = None):
         self.params = channel.params if isinstance(channel, RadioChannel) \
             else channel
         self.devices = list(devices)
         self.model = model
         self.order = tuple(device_order) if device_order is not None else \
             tuple(range(len(self.devices)))
+        self.position_spec = position_spec
         self.compute = np.array([l.flops for l in model.layers])
         self.memory = np.array([l.weight_bytes for l in model.layers])
         self.act_bits = np.array([l.act_bits for l in model.layers]) * act_scale
@@ -338,29 +385,29 @@ class ScenarioEngine:
         self.throughput = np.array([d.throughput for d in self.devices])
         self.plan_cache = plan_cache if plan_cache is not None \
             else PLAN_FN_CACHE
-        solve_key, tighten_key = self._cache_keys()
-        self._cache_keys_used = (solve_key, tighten_key)
+        solve_key = self._cache_key()
+        self._cache_keys_used = (solve_key,)
         self._solve = self.plan_cache.get(solve_key, partial(
             _build_solve_fn, params=self.params, compute=self.compute,
             memory=self.memory, act_bits=self.act_bits,
             input_bits=self.input_bits, mem_cap=self.mem_cap,
             compute_cap=self.compute_cap, throughput=self.throughput,
-            order=self.order))
-        self._tighten = self.plan_cache.get(tighten_key, partial(
-            _build_tighten_fn, params=self.params))
+            order=self.order, p2=self.position_spec))
 
-    def _cache_keys(self) -> Tuple[tuple, tuple]:
+    def _cache_key(self) -> tuple:
         """Static signature of the compiled plan: (U, L, S=|order|, dtype)
-        plus every constant baked into the traced graph, so two engines
+        plus every constant baked into the traced graph — including the P2
+        hyperparameters when position optimization is fused — so two engines
         share an entry exactly when their compiled plans would be
         identical."""
         base = (len(self.devices), len(self.compute), self.order, "float32",
-                self.params)
+                self.params,
+                self.position_spec.key() if self.position_spec else None)
         consts = (self.compute.tobytes(), self.memory.tobytes(),
                   self.act_bits.tobytes(), self.input_bits,
                   self.mem_cap.tobytes(), self.compute_cap.tobytes(),
                   self.throughput.tobytes())
-        return ("solve",) + base + consts, ("tighten", self.params)
+        return ("solve",) + base + consts
 
     @property
     def trace_count(self) -> int:
@@ -371,28 +418,42 @@ class ScenarioEngine:
         return self.plan_cache.info()
 
     # ------------------------------------------------------------------
-    def plan_batch(self, scenarios: ScenarioBatch) -> BatchPlan:
-        """Solve P1 + P3 for every scenario in one batched call."""
+    def plan_batch(self, scenarios: ScenarioBatch,
+                   p2_links: Optional[np.ndarray] = None) -> BatchPlan:
+        """Solve (P2 +) P1 + P3 for every scenario in one fused device call.
+
+        ``p2_links``: [U, U] or [B, U, U] bool transfer topology the fused
+        P2 stage optimizes positions for (default: the chain walked in the
+        engine's device order — the shape the chain DP places along).  Pass
+        a previous plan's used links to re-optimize positions for the
+        placement actually being served.  Only valid on engines built with
+        a ``PositionSpec``."""
         B_, U = scenarios.n_scenarios, scenarios.n_uavs
         active = scenarios.active if scenarios.active is not None else \
             np.ones((B_, U), dtype=bool)
         gain = scenarios.gain_scale
-        active_j = jnp.asarray(active)
-        power, rate, dist, th, assign_j, latency_j = self._solve(
+        links_j = None
+        if self.position_spec is not None:
+            links = chain_links(U, self.order) if p2_links is None else \
+                np.asarray(p2_links, dtype=bool)
+            if links.ndim == 2:
+                links = np.broadcast_to(links, (B_, U, U))
+            links_j = jnp.asarray(links)
+        elif p2_links is not None:
+            raise ValueError("p2_links given but this engine has no "
+                             "PositionSpec; build it with position_spec=")
+        positions, power, rate, assign_j, latency_j = self._solve(
             jnp.asarray(scenarios.positions, jnp.float32),
-            jnp.asarray(scenarios.source, jnp.int32), active_j,
-            None if gain is None else jnp.asarray(gain, jnp.float32))
-        assign = np.asarray(assign_j, dtype=np.int64)
-        latency = np.asarray(latency_j, dtype=np.float64)
-        # tighten P1 to the links each placement actually uses (the scalar
-        # planner's min_power_for_placement step, batched); dist and the
-        # eq. (7) thresholds are reused from the first solve
-        links = _used_links_mask(assign, scenarios.source, U)
-        power = np.asarray(
-            self._tighten(dist, th, jnp.asarray(links), active_j), np.float64)
+            jnp.asarray(scenarios.source, jnp.int32), jnp.asarray(active),
+            None if gain is None else jnp.asarray(gain, jnp.float32),
+            links_j)
+        power = np.asarray(power, np.float64)
         return BatchPlan(scenarios=scenarios, power=power,
-                         rate=np.asarray(rate, np.float64), assign=assign,
-                         latency=latency, total_power=power.sum(-1))
+                         rate=np.asarray(rate, np.float64),
+                         assign=np.asarray(assign_j, dtype=np.int64),
+                         latency=np.asarray(latency_j, dtype=np.float64),
+                         total_power=power.sum(-1),
+                         positions=np.asarray(positions, np.float64))
 
     def plan_positions(self, positions: np.ndarray,
                        source: int = 0) -> BatchPlan:
@@ -402,24 +463,6 @@ class ScenarioEngine:
         return self.plan_batch(batch)
 
 
-def _used_links_mask(assign: np.ndarray, source: np.ndarray,
-                     n_uavs: int) -> np.ndarray:
-    """[B,U,U] bool mask of the inter-UAV transfers each placement performs
-    (source -> first layer's device, then every device change along the
-    chain).  Infeasible scenarios (assign -1) use no links."""
-    B, L = assign.shape
-    links = np.zeros((B, n_uavs, n_uavs), dtype=bool)
-    rows = np.arange(B)
-    first = assign[:, 0]
-    m = (first >= 0) & (source != first)
-    links[rows[m], source[m], first[m]] = True
-    for j in range(L - 1):
-        a, b = assign[:, j], assign[:, j + 1]
-        m = (a >= 0) & (b >= 0) & (a != b)
-        links[rows[m], a[m], b[m]] = True
-    return links
-
-
 # ---------------------------------------------------------------------------
 # Precomputed failure contingencies (delegation without a re-solve)
 # ---------------------------------------------------------------------------
@@ -427,13 +470,19 @@ def _used_links_mask(assign: np.ndarray, source: np.ndarray,
 
 @dataclass(frozen=True)
 class ContingencyPlan:
-    """The delegation plan to apply when ``dead`` has failed."""
+    """The delegation plan to apply when ``dead`` has failed.
+
+    ``positions`` are the positions the plan was priced at — with a
+    position-optimizing engine, the device-side P2 solution for that failure
+    scenario (where the survivors should fly), otherwise the nominal
+    positions the table was refreshed with."""
 
     dead: Optional[str]        # device name, or None for the nominal plan
     dead_index: int            # index into the ORIGINAL device list (-1)
     assign: Tuple[int, ...]    # device ids into the ORIGINAL device list
     latency: float
     power: np.ndarray          # [U] over the ORIGINAL devices (0 for dead)
+    positions: Optional[np.ndarray] = None   # [U, 2] over ORIGINAL devices
 
     @property
     def survivor_assign(self) -> Tuple[int, ...]:
@@ -446,15 +495,17 @@ class ContingencyPlan:
                      for i in self.assign)
 
     def as_survivor_plan(self) -> "ContingencyPlan":
-        """Normalize to survivor index space: assign re-indexed and power
-        sliced to the shrunk device list, so the installed plan addresses
-        devices the same way a live ``replan_fn`` result would."""
+        """Normalize to survivor index space: assign re-indexed and power/
+        positions sliced to the shrunk device list, so the installed plan
+        addresses devices the same way a live ``replan_fn`` result would."""
         if self.dead_index < 0:
             return self
         return ContingencyPlan(
             dead=self.dead, dead_index=-1, assign=self.survivor_assign,
             latency=self.latency,
-            power=np.delete(self.power, self.dead_index))
+            power=np.delete(self.power, self.dead_index),
+            positions=None if self.positions is None else
+            np.delete(self.positions, self.dead_index, axis=0))
 
 
 class ContingencyTable:
@@ -496,11 +547,13 @@ class ContingencyTable:
             self.plans[names[k]] = ContingencyPlan(
                 dead=names[k], dead_index=k,
                 assign=tuple(int(x) for x in plan.assign[k]),
-                latency=float(plan.latency[k]), power=plan.power[k])
+                latency=float(plan.latency[k]), power=plan.power[k],
+                positions=plan.positions[k])
         self.plans[None] = ContingencyPlan(
             dead=None, dead_index=-1,
             assign=tuple(int(x) for x in plan.assign[U]),
-            latency=float(plan.latency[U]), power=plan.power[U])
+            latency=float(plan.latency[U]), power=plan.power[U],
+            positions=plan.positions[U])
 
     def lookup(self, dead_names: Sequence[str]
                ) -> Optional[ContingencyPlan]:
@@ -519,4 +572,5 @@ class ContingencyTable:
 __all__ = [
     "ScenarioBatch", "ScenarioGenerator", "BatchPlan", "ScenarioEngine",
     "ContingencyPlan", "ContingencyTable", "PlanFnCache", "PLAN_FN_CACHE",
+    "PositionSpec",
 ]

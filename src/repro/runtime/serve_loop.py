@@ -153,16 +153,25 @@ class PeriodicReplanner:
     in-flight request batch serves off the cached nominal placement, and the
     scenario ensemble prices the robustness of that plan (p95 latency).
 
+    When the engine carries a ``PositionSpec``, the refresh ALSO solves P2
+    on device: measured positions are only the initialization, the fused
+    plan returns where the swarm should fly (``planned_positions``), and —
+    with ``adopt_positions`` (default) — the generator's nominal state
+    follows the optimized positions, so no solved position ever crosses the
+    host boundary on its way into the next plan.
+
     ``engine``/``generator`` come from ``repro.runtime.scenario_engine``.
     """
 
     def __init__(self, engine, generator, period: int = 10,
-                 n_scenarios: int = 128, source: int = 0):
+                 n_scenarios: int = 128, source: int = 0,
+                 adopt_positions: bool = True):
         self.engine = engine
         self.generator = generator
         self.period = max(1, period)
         self.n_scenarios = n_scenarios
         self.source = source
+        self.adopt_positions = adopt_positions
         self.plan = None           # BatchPlan of the last refresh
         self.refreshes = 0
         self.last_refresh_s = 0.0  # wall-clock of the latest plan_batch call
@@ -198,6 +207,13 @@ class PeriodicReplanner:
             self._retraces += (getattr(self.engine, "trace_count", 0)
                                - trace_before)
         self.refreshes += 1
+        if (self.adopt_positions and self.plan.positions is not None
+                and getattr(self.engine, "position_spec", None) is not None):
+            # the fused P2 solved where the swarm should fly; make that the
+            # nominal state the next refresh (and its Monte-Carlo draws)
+            # starts from
+            self.generator.base_positions = np.asarray(
+                self.plan.positions[0], np.float64)
         return True
 
     @property
@@ -216,6 +232,15 @@ class PeriodicReplanner:
         if self.plan is None:
             return None
         return self.plan.assign[0]
+
+    @property
+    def planned_positions(self) -> Optional[np.ndarray]:
+        """[U, 2] positions the nominal plan was priced at — the device-side
+        P2 solution when the engine optimizes positions (the swarm's flight
+        target), else the measured positions echoed back."""
+        if self.plan is None or self.plan.positions is None:
+            return None
+        return self.plan.positions[0]
 
     @property
     def nominal_latency(self) -> float:

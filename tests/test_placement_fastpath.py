@@ -196,9 +196,9 @@ class TestPlanCache:
 
     def test_cache_shared_across_engines_identical_plans(self):
         engine1, base, cache = self._setup()
-        assert cache.misses == 2 and cache.hits == 0    # solve + tighten
+        assert cache.misses == 1 and cache.hits == 0    # ONE fused solve fn
         engine2, _, _ = self._setup(cache=cache)
-        assert cache.misses == 2 and cache.hits == 2    # same signature
+        assert cache.misses == 1 and cache.hits == 1    # same signature
         batch = ScenarioGenerator(base, pos_sigma_m=2.0, seed=0).draw(8)
         p1 = engine1.plan_batch(batch)
         p2 = engine2.plan_batch(batch)
@@ -206,8 +206,8 @@ class TestPlanCache:
         np.testing.assert_allclose(p1.latency, p2.latency)
         np.testing.assert_allclose(p1.power, p2.power)
         # ONE compile served both engines
-        assert engine1.trace_count == 2
-        assert engine2.trace_count == 2
+        assert engine1.trace_count == 1
+        assert engine2.trace_count == 1
 
     def test_plan_batch_never_retraces_at_fixed_shape(self):
         engine, base, _ = self._setup()

@@ -1,0 +1,274 @@
+"""Batched device-side P2 + the fully fused P1->P2->P3 planner.
+
+Three layers under test:
+
+* ``batch.solve_positions_batched``   — separation repair ON DEVICE must
+  deliver the legacy solver's feasibility guarantees (d >= 2R, coverage
+  circle) on whole batches, with ``solve_positions`` now exactly its B = 1
+  slice (parity vs ``solve_positions_legacy``, the retained host-repair
+  oracle);
+* the fused ``ScenarioEngine`` plan  — with a ``PositionSpec``, ONE jit call
+  runs P2 -> P1 -> rates -> chain DP -> used-links tightening; it must equal
+  the composition (standalone batched P2, then a position-taking engine),
+  never retrace across replanner frames, and rescue scenarios whose raw
+  positions are infeasible;
+* ``positions.assign_stages_to_torus`` — the branch-and-bound refinement
+  must match brute force on small instances, never do worse than the greedy
+  2-opt seed, and stay bounded under a tiny node budget.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.configs.lenet import LENET
+from repro.core import (ICIChannel, ICIParams, RadioChannel, RadioParams,
+                        assign_stages_to_torus, chain_links, cnn_cost,
+                        make_devices, solve_positions, solve_positions_batched,
+                        solve_positions_legacy)
+from repro.core.positions import hex_init
+from repro.runtime.scenario_engine import (ContingencyTable, PlanFnCache,
+                                           PositionSpec, ScenarioBatch,
+                                           ScenarioEngine, ScenarioGenerator)
+from repro.runtime.fault_tolerance import FaultTolerantRunner
+from repro.runtime.serve_loop import PeriodicReplanner
+
+PARAMS = RadioParams()
+CH = RadioChannel(PARAMS)
+
+
+def min_sep(pos):
+    """Minimum pairwise distance, batched over a leading axis if present."""
+    pos = np.asarray(pos)
+    d = np.sqrt(((pos[..., :, None, :] - pos[..., None, :, :]) ** 2).sum(-1))
+    U = pos.shape[-2]
+    d[..., np.eye(U, dtype=bool)] = np.inf
+    return d.min()
+
+
+class TestBatchedPositions:
+    def test_batch_separation_and_coverage(self):
+        """Every scenario ends 2R-separated and inside the coverage circle,
+        from random (violating) initializations — with zero host repair."""
+        from repro.core.batch import coverage_radius
+        rng = np.random.default_rng(0)
+        B, U, radius = 16, 6, 20.0
+        pos0 = rng.uniform(-150, 150, (B, U, 2))
+        sol = solve_positions_batched(pos0, PARAMS, radius=radius, steps=300,
+                                      center=(0.0, 0.0))
+        assert min_sep(sol.positions) >= 2 * radius - 0.5
+        assert sol.max_violation.max() < 0.5
+        r = np.linalg.norm(sol.positions, axis=-1)
+        assert r.max() <= coverage_radius(U, radius) + 1e-3
+
+    def test_b1_slice_matches_legacy_oracle(self):
+        """``solve_positions`` (the B=1 slice) must deliver the legacy
+        host-repair solver's feasibility AND land on a comparable objective
+        (same initialization, same trajectory; batched keeps the best
+        iterate instead of the last)."""
+        for seed in range(4):
+            new = solve_positions(5, CH, radius=20.0, steps=300, seed=seed)
+            old = solve_positions_legacy(5, CH, radius=20.0, steps=300,
+                                         seed=seed)
+            for sol in (new, old):
+                assert sol.max_violation < 0.5
+                assert min_sep(sol.positions) >= 2 * 20.0 - 0.5
+            assert new.objective <= old.objective * 1.25 + 1e-12
+            assert old.objective <= new.objective * 1.25 + 1e-12
+
+    def test_objective_trace_monotone(self):
+        rng = np.random.default_rng(3)
+        pos0 = rng.uniform(-100, 100, (8, 5, 2))
+        sol = solve_positions_batched(pos0, PARAMS, radius=15.0, steps=200)
+        assert sol.objective_trace.shape == (8, 200)
+        assert (np.diff(sol.objective_trace, axis=1) <= 0.0).all()
+
+    def test_chain_objective_near_oracle(self):
+        """Batched chain solve within 2x of the analytic collinear optimum
+        (the legacy test's bound, now on the device path)."""
+        from repro.core import chain_oracle
+        n, radius = 4, 20.0
+        sol = solve_positions(n, CH, radius=radius,
+                              links=chain_links(n), steps=600, seed=0)
+        d_sol = np.sqrt(((sol.positions[:, None] -
+                          sol.positions[None, :]) ** 2).sum(-1))
+        orc = chain_oracle(n, radius)
+        d_orc = np.sqrt(((orc[:, None] - orc[None, :]) ** 2).sum(-1))
+        obj_sol = sum(d_sol[i, i + 1] ** 2 for i in range(n - 1))
+        obj_orc = sum(d_orc[i, i + 1] ** 2 for i in range(n - 1))
+        assert obj_sol <= 2.0 * obj_orc
+
+    def test_per_scenario_links_masks(self):
+        """[B,U,U] per-scenario link topologies are honored independently:
+        each scenario contracts ITS linked pairs, not the union."""
+        B, U = 2, 4
+        links = np.zeros((B, U, U), dtype=bool)
+        links[0, 0, 1] = True            # scenario 0: only 0-1 linked
+        links[1, 2, 3] = True            # scenario 1: only 2-3 linked
+        pos0 = np.tile(hex_init(U, 120.0), (B, 1, 1))   # sparse start
+        sol = solve_positions_batched(pos0, PARAMS, radius=20.0, steps=400,
+                                      links=links)
+        d = np.sqrt(((sol.positions[:, :, None] -
+                      sol.positions[:, None, :]) ** 2).sum(-1))
+        # the linked pair contracts toward 2R; the same pair in the OTHER
+        # scenario (unlinked there) stays far apart
+        assert d[0, 0, 1] < d[1, 0, 1] - 20.0
+        assert d[1, 2, 3] < d[0, 2, 3] - 20.0
+
+
+class TestFusedPlanP2:
+    def _engine(self, spec, n_uavs=5, mem_frac=1.0, cache=None):
+        mc = cnn_cost(LENET)
+        devs = make_devices(n_uavs, mem_frac=mem_frac)
+        cache = cache if cache is not None else PlanFnCache()
+        return (ScenarioEngine(CH, devs, mc, plan_cache=cache,
+                               position_spec=spec),
+                hex_init(n_uavs, 40.0), cache)
+
+    def test_fused_equals_composition(self):
+        """One fused call == standalone batched P2 then a position-taking
+        engine on the optimized positions (same cache, same latencies,
+        same assignments, same tightened powers)."""
+        spec = PositionSpec(steps=200)
+        cache = PlanFnCache()
+        fused, base, _ = self._engine(spec, cache=cache)
+        plain, _, _ = self._engine(None, cache=cache)
+        gen = ScenarioGenerator(base, pos_sigma_m=3.0, seed=0)
+        batch = gen.draw(6)
+        plan_f = fused.plan_batch(batch)
+
+        U = batch.n_uavs
+        sol = solve_positions_batched(
+            batch.positions.astype(np.float32), PARAMS, radius=spec.radius,
+            links=chain_links(U, fused.order), steps=spec.steps, lr=spec.lr,
+            repair_iters=spec.repair_iters)
+        batch2 = ScenarioBatch(positions=sol.positions, source=batch.source,
+                               active=batch.active,
+                               gain_scale=batch.gain_scale)
+        plan_c = plain.plan_batch(batch2)
+        np.testing.assert_allclose(plan_f.positions, plan_c.positions,
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_array_equal(plan_f.assign, plan_c.assign)
+        np.testing.assert_allclose(plan_f.latency, plan_c.latency, rtol=1e-5)
+        np.testing.assert_allclose(plan_f.power, plan_c.power, rtol=1e-5,
+                                   atol=1e-12)
+
+    def test_p2_rescues_infeasible_scenarios(self):
+        """Scenarios whose raw positions leave every link infeasible (and
+        whose memory forces a split) plan to inf without P2 — the fused P2
+        stage flies the swarm back into range and the SAME scenarios become
+        feasible."""
+        # a line at 100 m spacing: EVERY pair is beyond the ~55 m p_max
+        # feasibility range, yet within P2's travel budget (steps * lr)
+        base = np.stack([np.arange(5) * 100.0, np.zeros(5)], axis=1)
+        batch = ScenarioBatch(
+            positions=np.broadcast_to(base, (4, 5, 2)).copy(),
+            source=np.zeros(4, dtype=int))
+        # mem_frac 2e-4: all of LeNet overflows one UAV (so the chain MUST
+        # split and use a link) but every single layer still fits somewhere
+        cache = PlanFnCache()
+        plain, _, _ = self._engine(None, mem_frac=2e-4, cache=cache)
+        fused, _, _ = self._engine(PositionSpec(steps=600), mem_frac=2e-4,
+                                   cache=cache)
+        assert not np.isfinite(plain.plan_batch(batch).latency).any()
+        plan = fused.plan_batch(batch)
+        assert np.isfinite(plan.latency).all()
+        assert min_sep(plan.positions) >= 2 * 20.0 - 0.5
+
+    def test_zero_retraces_and_position_adoption(self):
+        """Fused-P2 replanner frames never retrace, and the generator's
+        nominal state follows the device-optimized positions."""
+        fused, base, _ = self._engine(PositionSpec(steps=100))
+        gen = ScenarioGenerator(base + 7.0, pos_sigma_m=1.0, seed=0)
+        rp = PeriodicReplanner(fused, gen, period=3, n_scenarios=8)
+        for f in range(9):
+            rp.tick(f)
+        assert rp.refreshes == 3
+        assert rp.retraces == 0
+        assert np.array_equal(rp.generator.base_positions,
+                              rp.plan.positions[0])
+        assert np.array_equal(rp.planned_positions, rp.plan.positions[0])
+        # opting out leaves the nominal state alone
+        rp2 = PeriodicReplanner(fused,
+                                ScenarioGenerator(base + 7.0, seed=0),
+                                period=3, n_scenarios=8,
+                                adopt_positions=False)
+        rp2.tick(0)
+        np.testing.assert_array_equal(rp2.generator.base_positions, base + 7.0)
+
+    def test_contingency_carries_survivor_positions(self):
+        """Failure-sweep plans from a position-optimizing engine carry the
+        per-contingency P2 solution, sliced to survivor space on lookup —
+        and a mobility refresh through the runner stays retrace-free."""
+        fused, base, _ = self._engine(PositionSpec(steps=100))
+        table = ContingencyTable(fused, base, source=0)
+        devs = fused.devices
+        for k, d in enumerate(devs):
+            cp = table.plans[d.name]
+            assert cp.positions.shape == (len(devs), 2)
+            if np.isfinite(cp.latency):
+                assert cp.as_survivor_plan().positions.shape == \
+                    (len(devs) - 1, 2)
+        runner = FaultTolerantRunner(devs, lambda d: len(d), ".",
+                                     contingency=table)
+        traces = fused.trace_count
+        runner.on_mobility(base + 0.5, source=0)
+        assert fused.trace_count == traces
+        plan = runner.on_failure([devs[2].name])
+        if plan is not None and hasattr(plan, "positions") and \
+                np.isfinite(plan.latency):
+            assert plan.positions.shape == (len(devs) - 1, 2)
+
+
+class TestTorusBranchAndBound:
+    def _chain_traffic(self, n, rng):
+        t = np.zeros((n, n))
+        for i in range(n - 1):
+            t[i, i + 1] = rng.uniform(1e6, 1e8)
+        return t
+
+    def _cost(self, pl, traffic, ch):
+        n = len(pl)
+        return sum(ch.transfer_time(traffic[i, k], ch.hops(pl[i], pl[k]))
+                   for i in range(n) for k in range(n) if traffic[i, k] > 0)
+
+    def test_matches_bruteforce_small(self):
+        """On a 3x3 torus with 4 stages the budgeted B&B must find the true
+        optimum (brute force over all 9P4 placements)."""
+        ch = ICIChannel(ICIParams(torus=(3, 3)))
+        coords = [(x, y) for x in range(3) for y in range(3)]
+        rng = np.random.default_rng(0)
+        for seed in range(3):
+            traffic = self._chain_traffic(4, np.random.default_rng(seed))
+            got = assign_stages_to_torus(4, traffic, ch)
+            best = min(self._cost(list(pl), traffic, ch)
+                       for pl in itertools.permutations(coords, 4))
+            assert np.isclose(self._cost(got, traffic, ch), best, rtol=1e-9)
+
+    def test_never_worse_than_greedy_seed(self):
+        ch = ICIChannel(ICIParams(torus=(4, 4)))
+        rng = np.random.default_rng(5)
+        traffic = np.abs(rng.normal(0, 1e7, (6, 6)))
+        refined = assign_stages_to_torus(6, traffic, ch)
+        seed_only = assign_stages_to_torus(6, traffic, ch, exact_cutoff=0)
+        assert self._cost(refined, traffic, ch) <= \
+            self._cost(seed_only, traffic, ch) + 1e-12
+
+    def test_budget_bounds_large_calls(self):
+        """A big torus + many stages returns promptly under a small node
+        budget (no O(n!) hang) and still yields a valid placement."""
+        import time
+        ch = ICIChannel(ICIParams(torus=(16, 16)))
+        rng = np.random.default_rng(2)
+        traffic = self._chain_traffic(8, rng)
+        t0 = time.perf_counter()
+        pl = assign_stages_to_torus(8, traffic, ch, node_budget=5_000)
+        assert time.perf_counter() - t0 < 30.0
+        assert len(pl) == 8 and len(set(pl)) == 8
+
+    def test_above_cutoff_falls_back_to_greedy(self):
+        ch = ICIChannel(ICIParams(torus=(4, 4)))
+        rng = np.random.default_rng(7)
+        traffic = self._chain_traffic(10, rng)
+        pl = assign_stages_to_torus(10, traffic, ch, exact_cutoff=8)
+        assert len(pl) == 10 and len(set(pl)) == 10

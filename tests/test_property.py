@@ -13,7 +13,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (Device, PlacementProblem, RadioChannel, RadioParams,
                         solve_bnb, solve_brute, solve_chain_dp_minmax,
-                        solve_greedy, solve_power)
+                        solve_greedy, solve_positions, solve_positions_batched,
+                        solve_positions_legacy, solve_power)
+from repro.core.batch import coverage_radius
+from repro.core.positions import hex_init
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -137,6 +140,71 @@ class TestMinmaxProperties:
         if not sol.assign:
             return
         assert sol.latency <= clone(p).latency(sol.assign) + 1e-9
+
+
+class TestBatchedPositionProperties:
+    """Invariants of the device-side P2 path (``solve_positions_batched``).
+
+    Steps are held constant across examples so hypothesis never forces an
+    XLA recompile (the scan length is a static argument); U varies, which
+    costs at most one compile per swarm size.
+    """
+
+    P2_STEPS = 200
+
+    def _inits(self, n, radius, seed, batch=4):
+        """Mix of realistic inits: jittered hex packings and sparse uniform
+        spreads (both inside the coverage circle)."""
+        rng = np.random.default_rng(seed)
+        cover = coverage_radius(n, radius)
+        hexes = np.stack([hex_init(n, 2 * radius, jitter=radius / 3,
+                                   seed=seed + i) for i in range(batch // 2)])
+        spread = rng.uniform(-0.5 * cover, 0.5 * cover,
+                             (batch - batch // 2, n, 2))
+        return np.concatenate([hexes, spread])
+
+    @given(st.integers(2, 6), st.floats(5.0, 25.0), st.integers(0, 2 ** 31))
+    @settings(**SETTINGS)
+    def test_repair_separation_and_coverage(self, n, radius, seed):
+        """After the on-device repair: min pairwise distance >= 2R (small
+        tolerance) and every UAV inside the coverage circle (eq. 8c/8d)."""
+        pos0 = self._inits(n, radius, seed)
+        sol = solve_positions_batched(pos0, RadioParams(), radius=radius,
+                                      steps=self.P2_STEPS, center=(0.0, 0.0))
+        d = np.sqrt(((sol.positions[:, :, None] -
+                      sol.positions[:, None, :]) ** 2).sum(-1))
+        d[:, np.eye(n, dtype=bool)] = np.inf
+        assert d.min() >= 2 * radius - 0.5
+        assert sol.max_violation.max() < 0.5
+        r = np.linalg.norm(sol.positions, axis=-1)
+        assert r.max() <= coverage_radius(n, radius) + 1e-3
+
+    @given(st.integers(2, 6), st.floats(8.0, 25.0), st.integers(0, 2 ** 31))
+    @settings(max_examples=10, deadline=None)
+    def test_b1_parity_with_legacy(self, n, radius, seed):
+        """The B = 1 slice and the legacy host-repair solver agree: both
+        feasible, objectives within a constant factor (same trajectory;
+        batched returns the best iterate, legacy the last)."""
+        ch = RadioChannel()
+        new = solve_positions(n, ch, radius=radius, steps=self.P2_STEPS,
+                              seed=seed % 1000)
+        old = solve_positions_legacy(n, ch, radius=radius,
+                                     steps=self.P2_STEPS, seed=seed % 1000)
+        for sol in (new, old):
+            assert sol.max_violation < 0.5
+        assert new.objective <= 2.0 * old.objective + 1e-12
+        assert old.objective <= 2.0 * new.objective + 1e-12
+
+    @given(st.integers(2, 6), st.floats(5.0, 25.0), st.integers(0, 2 ** 31))
+    @settings(**SETTINGS)
+    def test_objective_monotone_over_scan_steps(self, n, radius, seed):
+        """The emitted objective trace never increases: the scan carries the
+        best-so-far iterate, making the solver anytime-safe."""
+        pos0 = self._inits(n, radius, seed)
+        sol = solve_positions_batched(pos0, RadioParams(), radius=radius,
+                                      steps=self.P2_STEPS)
+        assert sol.objective_trace.shape == (pos0.shape[0], self.P2_STEPS)
+        assert (np.diff(sol.objective_trace, axis=1) <= 0.0).all()
 
 
 class TestCheckpointProperties:
