@@ -2,10 +2,18 @@
 
 Paper claims reproduced: latency falls as P_max rises (longer reliable
 links become usable), as #UAVs rises (more placement freedom), and as
-bandwidth rises (faster reliable links)."""
+bandwidth rises (faster reliable links).
+
+Rebased onto the fleet rollout: each figure point is ONE device call — a
+(B = 1, T = frames) rollout with the fused P2 -> P1 -> P3 solve per frame —
+instead of a scalar planner loop.  Rows carry the feasibility-rate column:
+a point whose frames went infeasible can't hide inside the mean.
+"""
 from __future__ import annotations
 
-from benchmarks.common import emit, run_planner
+import argparse
+
+from benchmarks.common import emit, run_rollout
 from repro.core import RadioParams
 
 PMAX_MW = (20, 40, 60, 80, 100, 120)
@@ -14,17 +22,21 @@ BW_MHZ = (10, 20)
 REQUESTS = 6
 
 
-def main() -> None:
-    for bw in BW_MHZ:
-        for n in UAVS:
-            for pmax in PMAX_MW:
-                params = RadioParams(p_max_watts=pmax * 1e-3,
-                                     bandwidth_hz=bw * 1e6)
-                plan, wall = run_planner("llhr", "alexnet", n, REQUESTS,
-                                         params)
-                lat = plan.total_latency / REQUESTS
-                emit(f"fig2/bw={bw}MHz/uavs={n}/pmax={pmax}mW", wall,
-                     f"{lat:.4f}")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI grid: 2 points, 2 frames")
+    args = ap.parse_args(argv)
+    grid = [(bw, n, pmax) for bw in BW_MHZ for n in UAVS for pmax in PMAX_MW]
+    frames, steps = 4, 60
+    if args.smoke:
+        grid, frames, steps = [(10, 4, 40), (10, 4, 120)], 2, 30
+    for bw, n, pmax in grid:
+        params = RadioParams(p_max_watts=pmax * 1e-3, bandwidth_hz=bw * 1e6)
+        trace, wall = run_rollout("alexnet", n, REQUESTS, params,
+                                  frames=frames, position_steps=steps)
+        emit(f"fig2/bw={bw}MHz/uavs={n}/pmax={pmax}mW", wall,
+             f"{trace.mean_latency:.4f}", trace.feasibility_rate)
 
 
 if __name__ == "__main__":

@@ -3,17 +3,21 @@
 Modes:
 
 * (default)        — one module per paper figure + kernel microbench,
-                     printing ``name,us_per_call,derived`` CSV.
+                     printing ``name,us_per_call,derived[,feasibility]``
+                     CSV.  The LLHR figure points ride the fleet rollout
+                     (one device call per point).
 * ``--bench``      — the perf pipeline: runs ``bench_placement``,
-                     ``bench_scenario_engine`` and ``bench_positions`` at
-                     full size and writes ``BENCH_placement.json`` /
-                     ``BENCH_scenario_engine.json`` / ``BENCH_positions.json``
-                     (wall-clock, compile time, speedups vs the NumPy
-                     oracle, the PR 1 tracer, and the scalar P2 loop)
-                     into ``--out``.
-* ``--smoke``      — same pipeline at tiny B/U/L (CI-sized, CPU-friendly);
-                     agreement, feasibility and zero-retrace asserts stay
-                     on, speedup asserts are skipped.
+                     ``bench_scenario_engine``, ``bench_positions`` and
+                     ``bench_rollout`` at full size and writes the
+                     corresponding ``BENCH_*.json`` files (wall-clock,
+                     compile time, speedups vs the NumPy oracle, the PR 1
+                     tracer, the scalar P2 loop, and the legacy per-frame
+                     SwarmSim loop) into ``--out``.
+* ``--smoke``      — same pipeline at tiny B/U/L (CI-sized, CPU-friendly)
+                     PLUS the rebased fig2-5 scripts in --smoke mode, so
+                     the paper-figure path is exercised in CI; agreement,
+                     feasibility, parity and zero-retrace asserts stay on,
+                     speedup asserts are skipped.
 
 The dry-run/roofline benchmark (reports/dryrun) is driven separately by
 scripts/run_dryrun_all.sh since it needs a 512-device process.
@@ -29,19 +33,22 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
-def run_figures() -> None:
+def run_figures(smoke: bool = False) -> None:
     from benchmarks import (bench_kernels, fig2_latency_power,
                             fig3_latency_memory, fig4_min_power,
                             fig5_request_scaling)
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,feasibility")
+    flags = ["--smoke"] if smoke else []
     for mod in (fig2_latency_power, fig3_latency_memory, fig4_min_power,
-                fig5_request_scaling, bench_kernels):
-        mod.main()
+                fig5_request_scaling):
+        mod.main(flags)
+    if not smoke:
+        bench_kernels.main()
 
 
 def run_bench(out_dir: str, smoke: bool) -> None:
     from benchmarks import (bench_placement, bench_positions,
-                            bench_scenario_engine)
+                            bench_rollout, bench_scenario_engine)
     os.makedirs(out_dir, exist_ok=True)
     flags = ["--smoke"] if smoke else []
     bench_placement.main(
@@ -51,6 +58,11 @@ def run_bench(out_dir: str, smoke: bool) -> None:
                  os.path.join(out_dir, "BENCH_scenario_engine.json")])
     bench_positions.main(
         flags + ["--json", os.path.join(out_dir, "BENCH_positions.json")])
+    bench_rollout.main(
+        flags + ["--json", os.path.join(out_dir, "BENCH_rollout.json")])
+    if smoke:
+        # the paper-figure path rides the rollout now — exercise it in CI
+        run_figures(smoke=True)
 
 
 def main(argv=None) -> None:

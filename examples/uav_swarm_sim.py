@@ -2,6 +2,11 @@
 all three planners, request scaling, failure injection and the Fig. 2-5
 quantities printed as a table.
 
+The LLHR rows run on the device-side fleet rollout (the whole frame loop
+is ONE jit call — see docs/fleet_rollout.md); the baselines go through the
+legacy host loop via the uniform SwarmPlanner protocol.  Every row reports
+its feasibility rate so infeasible frames can't hide inside the mean.
+
     PYTHONPATH=src python examples/uav_swarm_sim.py [--frames 3]
 """
 import argparse
@@ -12,8 +17,16 @@ from repro.configs.alexnet import ALEXNET
 from repro.configs.lenet import LENET
 from repro.core import (HeuristicPlanner, LLHRPlanner, RandomPlanner,
                         RadioChannel, RadioParams, SwarmSim,
-                        average_latency, average_power, cnn_cost,
-                        make_devices)
+                        average_power, cnn_cost, latency_summary,
+                        make_devices, solve_chain_dp)
+
+
+def llhr(ch, steps):
+    """Chain-DP-placement LLHR planner — the solver the fused rollout
+    implements, so SwarmSim's auto backend runs the whole frame loop in
+    one device call."""
+    return LLHRPlanner(ch, placement_solver=solve_chain_dp,
+                       position_steps=steps)
 
 
 def run(model_name, cfg, planner_name, planner, frames, fail=False):
@@ -21,12 +34,13 @@ def run(model_name, cfg, planner_name, planner, frames, fail=False):
                    requests_per_frame=4,
                    failure_frame=1 if fail else -1, failure_uav=2)
     stats = sim.run(frames=frames)
-    lat = average_latency(stats)
+    s = latency_summary(stats)
     pw = average_power(stats)
     flag = " (+failure@1)" if fail else ""
     print(f"  {model_name:8s} {planner_name:10s} avg latency "
-          f"{lat:8.4f} s   avg power {pw * 1e3:7.2f} mW{flag}")
-    return lat
+          f"{s.mean_latency:8.4f} s   avg power {pw * 1e3:7.2f} mW   "
+          f"feasible {100 * s.feasibility_rate:3.0f}%{flag}")
+    return s.mean_latency
 
 
 def main() -> None:
@@ -38,17 +52,15 @@ def main() -> None:
     print("=== swarm simulation:", args.frames, "frames, 6 UAVs, "
           "4 requests/frame ===")
     for model_name, cfg in (("lenet", LENET), ("alexnet", ALEXNET)):
-        llhr = run(model_name, cfg, "LLHR",
-                   LLHRPlanner(ch, position_steps=80), args.frames)
+        lat = run(model_name, cfg, "LLHR", llhr(ch, 80), args.frames)
         heur = run(model_name, cfg, "heuristic", HeuristicPlanner(ch),
                    args.frames)
         rand = run(model_name, cfg, "random", RandomPlanner(ch),
                    args.frames)
-        assert llhr <= heur + 1e-9 and llhr <= rand + 1e-9, \
+        assert lat <= heur + 1e-9 and lat <= rand + 1e-9, \
             "LLHR must dominate (Fig. 5)"
     print("\n=== failure delegation (the paper's Section II semantics) ===")
-    run("lenet", LENET, "LLHR", LLHRPlanner(ch, position_steps=80),
-        args.frames, fail=True)
+    run("lenet", LENET, "LLHR", llhr(ch, 80), args.frames, fail=True)
     print("\nall orderings match the paper: LLHR <= heuristic <= random")
 
 

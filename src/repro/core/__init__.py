@@ -17,7 +17,11 @@ from repro.core.positions import (chain_oracle, hex_init, solve_positions,
                                   solve_positions_legacy,
                                   assign_stages_to_torus)
 from repro.core.baselines import HeuristicPlanner, RandomPlanner
-from repro.core.swarm import (SwarmSim, average_latency, average_power,
+from repro.core.rollout import (PositionSpec, RolloutSpec, make_plan_fn,
+                                make_rollout_fn, percentile_with_inf)
+from repro.core.swarm import (LatencySummary, SwarmPlanner, SwarmSim,
+                              average_latency, average_power,
+                              feasibility_rate, latency_summary,
                               make_devices)
 from repro.core.pipeline_opt import (StagePlan, pipeline_efficiency,
                                      plan_pipeline, stage_devices)
@@ -30,9 +34,12 @@ __all__ = [
     "solve_random", "LLHRPlanner", "Plan", "PowerSolution", "solve_power",
     "chain_oracle", "hex_init", "solve_positions", "solve_positions_legacy",
     "assign_stages_to_torus",
-    "HeuristicPlanner", "RandomPlanner", "SwarmSim", "average_latency",
-    "average_power", "make_devices", "StagePlan", "pipeline_efficiency",
-    "plan_pipeline", "stage_devices",
+    "HeuristicPlanner", "RandomPlanner", "SwarmSim", "SwarmPlanner",
+    "average_latency", "average_power", "feasibility_rate",
+    "latency_summary", "LatencySummary", "make_devices",
+    "PositionSpec", "RolloutSpec", "make_plan_fn", "make_rollout_fn",
+    "percentile_with_inf",
+    "StagePlan", "pipeline_efficiency", "plan_pipeline", "stage_devices",
     "BatchPositionSolution", "BatchPowerSolution", "chain_links",
     "links_from_assignment_batched", "pairwise_dist_batched",
     "power_threshold_batched", "rate_matrix_batched",

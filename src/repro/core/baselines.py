@@ -58,7 +58,10 @@ def random_positions(n_uavs: int, rng: np.random.Generator,
 
 @dataclass
 class HeuristicPlanner:
-    """Static-path baseline: LLHR minus position optimization minus ILP."""
+    """Static-path baseline: LLHR minus position optimization minus ILP.
+
+    Implements the ``SwarmPlanner`` protocol: ``t`` indexes the fixed tour
+    (the 'static path defined in the input configuration')."""
 
     channel: RadioChannel
     radius: float = 20.0
@@ -81,6 +84,9 @@ class RandomPlanner:
     ``spread``) rather than the whole 480 m area: with the paper's channel a
     fully scattered swarm has no reliable links at all, and the baseline is
     meant to produce the *worst finite* latency (Fig. 5), not a dead network.
+
+    Implements the ``SwarmPlanner`` protocol: ``t`` reseeds the per-frame
+    movement and placement draws.
     """
 
     channel: RadioChannel

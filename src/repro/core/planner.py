@@ -73,12 +73,17 @@ class LLHRPlanner:
              devices: Sequence[Device],
              requests: Sequence[int],
              positions: Optional[np.ndarray] = None,
-             act_scale: float = 1.0) -> Tuple[Plan, List[PlacementProblem]]:
+             act_scale: float = 1.0,
+             t: int = 0) -> Tuple[Plan, List[PlacementProblem]]:
         """Produce a full LLHR plan.
 
         ``requests``: source UAV index per request.
         ``act_scale``: scales K_j (e.g. quantized intermediate tensors).
+        ``t``: the simulator's frame index (``SwarmPlanner`` protocol) —
+        ignored: the LLHR plan is time-invariant, positions are
+        re-optimized every call rather than scripted.
         """
+        del t
         U = len(devices)
         # --- P2: positions ------------------------------------------------
         if positions is None:

@@ -1,0 +1,327 @@
+"""Device-side fleet rollout: T-frame swarm simulation as ONE ``lax.scan``.
+
+The host-loop ``SwarmSim`` calls the planner once per frame — exactly the
+per-request re-solve the paper says a dynamic swarm cannot afford.  This
+module turns the whole frame loop into a device program: a ``lax.scan`` over
+T frames, each frame applying
+
+  1. **mobility**   — waypoint drift (bounded step toward a per-UAV
+                      waypoint) plus Gaussian jitter;
+  2. **failures**   — Bernoulli failure and recovery draws, plus externally
+                      forced failures (the simulator's injection hook);
+  3. **battery**    — a UAV whose charge hit zero is excluded from planning
+                      exactly like a failed UAV (the contingency semantics
+                      the chain DP already implements via ``active``);
+  4. **requests**   — a capturing UAV per frame (remapped to a survivor when
+                      the drawn source is down) with an arrival count that
+                      scales the energy spent serving;
+  5. **planning**   — the fused P2 -> P1 -> eq. (5) -> chain-DP -> tightened
+                      powers solve, IN-TRACE (``make_plan_fn`` below is the
+                      same pure function ``ScenarioEngine.plan_batch`` jits);
+  6. **accounting** — per-frame latency, transmit energy (power x airtime),
+                      compute energy (J/MAC), and the battery state carried
+                      into the next frame.
+
+Everything is batched over B independent fleet trajectories, so a whole
+(B, T) rollout is one jit call with zero host crossings between frames.
+Random draws (jitter, failure/recovery uniforms, sources) are made on the
+host ONCE per rollout and shipped as scan inputs — which is what makes the
+legacy host loop replayable as a per-frame parity oracle
+(``tests/test_rollout.py``).
+
+Shapes: B = trajectories, T = frames, U = UAVs, L = layers.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batch import (_chain_dp_solve, _positions_pgd, chain_links,
+                              coverage_radius, links_from_assignment_batched,
+                              pairwise_dist_batched, position_coeff,
+                              power_threshold_batched, rate_matrix_batched,
+                              solve_power_batched)
+from repro.core.channel import RadioParams
+
+
+@dataclass(frozen=True)
+class PositionSpec:
+    """Static P2 hyperparameters for the fused planner.
+
+    Part of the compiled-plan cache key: engines sharing (problem signature,
+    spec) share ONE compiled plan; changing any field compiles a new one.
+    """
+
+    steps: int = 300           # projected-gradient iterations
+    lr: float = 0.5            # normalized-gradient step size (m)
+    radius: float = 20.0       # UAV coverage radius R (eq. 8c/8d)
+    repair_iters: int = 50     # device-side push-apart iterations
+
+    def key(self) -> tuple:
+        return ("p2", self.steps, self.lr, self.radius, self.repair_iters)
+
+
+@dataclass(frozen=True)
+class RolloutSpec:
+    """Static dynamics constants of a fleet rollout.
+
+    Every field is baked into the traced scan body, so the whole spec is
+    part of the compiled-rollout cache key (``key()``).  ``frames`` is only
+    the default horizon — the scan length comes from the input arrays, so a
+    different T re-uses the same compiled callable (one retrace per new T).
+
+    * Mobility: each UAV drifts up to ``drift_m_per_frame`` toward its
+      waypoint, plus N(0, jitter_sigma_m) per-axis jitter.
+    * Failures: i.i.d. Bernoulli per frame — alive UAVs fail with
+      ``failure_prob``, failed ones rejoin with ``recovery_prob``.
+    * Battery: every UAV starts with ``battery_j`` joules; serving drains
+      ``compute_j_per_mac`` per multiply plus transmit power x airtime, and
+      hovering costs ``hover_watts`` over the ``frame_s`` frame.  A drained
+      UAV is excluded from planning from the NEXT frame on (detection at
+      the frame boundary, like a lapsed heartbeat) and never recovers.
+    """
+
+    frames: int = 32
+    frame_s: float = 60.0              # optimization period (Section IV)
+    requests_per_frame: int = 1        # RQ arrivals from the capturing UAV
+    drift_m_per_frame: float = 0.0     # waypoint pull per frame (m)
+    jitter_sigma_m: float = 0.0        # mobility jitter std-dev (m)
+    waypoint_range_m: float = 0.0      # waypoints drawn in +-range around base
+    failure_prob: float = 0.0
+    recovery_prob: float = 0.0
+    battery_j: float = math.inf        # initial charge (J); inf = no battery
+    hover_watts: float = 0.0
+    compute_j_per_mac: float = 1e-9    # ~1 nJ/MAC, Raspberry-Pi class
+
+    def key(self) -> tuple:
+        return ("rollout-spec", self.frame_s, self.requests_per_frame,
+                self.drift_m_per_frame, self.jitter_sigma_m,
+                self.waypoint_range_m, self.failure_prob, self.recovery_prob,
+                self.battery_j, self.hover_watts, self.compute_j_per_mac)
+
+
+# ---------------------------------------------------------------------------
+# The fused planning tick as a reusable pure function
+# ---------------------------------------------------------------------------
+
+
+def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
+                 input_bits, mem_cap, compute_cap, throughput,
+                 order: Tuple[int, ...],
+                 p2: Optional[PositionSpec] = None):
+    """The WHOLE planning tick as one pure, trace-safe function:
+
+        (P2 positions from the input initializations, when ``p2`` is set)
+        -> pairwise distances -> P1 powers -> eq. (5) rates
+        -> chain-DP placement (solve + device-side backtrack)
+        -> used-links mask from the assignment -> tightened P1 powers.
+
+    Nothing crosses the host boundary between stages: the used-links
+    tightening (the scalar planner's ``min_power_for_placement``) consumes
+    the assignment straight from the DP backtrack via
+    ``links_from_assignment_batched``, and reuses the eq. (7) thresholds
+    computed for the first P1 pass.
+
+    ``ScenarioEngine`` jits the returned function directly (one call per
+    ``plan_batch``); ``make_rollout_fn`` embeds the SAME function inside the
+    frame scan, so a rollout frame and a batched plan are bit-identical.
+    """
+    compute = jnp.asarray(compute, jnp.float32)
+    memory = jnp.asarray(memory, jnp.float32)
+    act_bits = jnp.asarray(act_bits, jnp.float32)
+    input_bits = jnp.float32(input_bits)
+    mem_cap = jnp.asarray(mem_cap, jnp.float32)
+    compute_cap = jnp.asarray(compute_cap, jnp.float32)
+    throughput = jnp.asarray(throughput, jnp.float32)
+    U = int(mem_cap.shape[0])
+
+    def solve(positions, source, active, gain_scale, p2_links):
+        if p2 is not None:
+            positions, _, _, _ = _positions_pgd(
+                positions, p2_links,
+                jnp.float32(position_coeff(params)), jnp.float32(p2.lr),
+                jnp.float32(2.0 * p2.radius),
+                jnp.float32(coverage_radius(U, p2.radius)),
+                positions.mean(axis=1), p2.steps, p2.repair_iters)
+        dist = pairwise_dist_batched(positions)
+        th = power_threshold_batched(dist, params, gain_scale=gain_scale)
+        pw = solve_power_batched(dist, params, active=active,
+                                 gain_scale=gain_scale, threshold_matrix=th)
+        rate = rate_matrix_batched(dist, pw.power, params, pw.link_feasible,
+                                   gain_scale=gain_scale)
+        assign, latency = _chain_dp_solve(
+            compute, memory, act_bits, input_bits, mem_cap, compute_cap,
+            throughput, rate, source, active, order)
+        used = links_from_assignment_batched(assign, source, U)
+        power = solve_power_batched(dist, params, links=used, active=active,
+                                    threshold_matrix=th).power
+        return positions, power, rate, assign, latency
+
+    return solve
+
+
+def _frame_energy(assign, source, power, rate, compute, act_bits,
+                  input_bits):
+    """Per-UAV energy of serving one frame's requests.
+
+    * compute: MACs of the layers each UAV hosts (eq. 1-2 costs via the
+      assignment one-hot), per request;
+    * transmit: solved power x time-on-air, where airtime is the bits each
+      used link carries (eq. 12/14: input bits into the first block,
+      activation bits on every device change) over its eq. (5) rate.
+
+    Returns (macs [B, U], tx_time [B, U]) for ONE request — callers scale
+    by the frame's arrival count.  Infeasible frames (assign == -1)
+    contribute zero MACs and zero airtime.
+    """
+    B, L = assign.shape
+    U = power.shape[-1]
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, L))
+    onehot = assign[..., None] == jnp.arange(U)           # [B, L, U]
+    macs = (compute[None, :, None] * onehot).sum(1)       # [B, U]
+    prev = jnp.concatenate([source[:, None], assign[:, :-1]], axis=1)
+    bits_in = jnp.concatenate([input_bits[None], act_bits[:-1]])     # [L]
+    hop = (prev >= 0) & (assign >= 0) & (prev != assign)
+    a = jnp.clip(prev, 0, U - 1)
+    b = jnp.clip(assign, 0, U - 1)
+    r = rate[rows, a, b]                                  # [B, L]
+    t_link = jnp.where(hop & (r > 0), bits_in[None, :] / r, 0.0)
+    tx_time = jnp.zeros((B, U)).at[rows, a].add(t_link)   # transmitter pays
+    return macs, tx_time
+
+
+# ---------------------------------------------------------------------------
+# The rollout scan
+# ---------------------------------------------------------------------------
+
+
+def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
+                    act_bits, input_bits, mem_cap, compute_cap, throughput,
+                    order: Tuple[int, ...], spec: RolloutSpec,
+                    p2: Optional[PositionSpec] = None):
+    """Compile the (B, T) fleet rollout: ONE jit call, zero host crossings.
+
+    The returned callable takes
+
+        pos0      [B, U, 2]  initial positions
+        charge0   [B, U]     initial battery (J; inf = unlimited)
+        alive0    [B, U]     initial failure state
+        waypoint  [B, U, 2]  per-UAV drift targets
+        jitter    [T, B, U, 2]  pre-drawn mobility noise
+        fail_u    [T, B, U]  failure uniforms  (< failure_prob kills)
+        recov_u   [T, B, U]  recovery uniforms (< recovery_prob revives)
+        forced    [T, B, U]  bool, True = externally forced dead this frame
+        source    [T, B]     drawn capturing UAV (remapped to a survivor)
+        n_req     [T, B]     request arrivals this frame
+
+    and returns per-frame stacks (leading T): positions, active, charge,
+    latency, total tightened power, feasibility, assignment, the remapped
+    source, and per-UAV transmit/compute energy.
+
+    Frame order matters and is fixed: mobility -> failure/recovery ->
+    battery gate -> plan -> energy drain.  The charge consumed serving a
+    frame only gates the NEXT frame (a UAV that dies mid-frame still
+    finishes its subtask), which gives the battery carry its two tested
+    invariants: monotone non-increasing, and dead => excluded from the
+    following frames' placements.
+    """
+    solve = make_plan_fn(params=params, compute=compute, memory=memory,
+                         act_bits=act_bits, input_bits=input_bits,
+                         mem_cap=mem_cap, compute_cap=compute_cap,
+                         throughput=throughput, order=order, p2=p2)
+    compute_j = jnp.asarray(compute, jnp.float32)
+    act_j = jnp.asarray(act_bits, jnp.float32)
+    input_j = jnp.float32(input_bits)
+    U = int(np.asarray(mem_cap).shape[0])
+    links_const = jnp.asarray(chain_links(U, order)) if p2 is not None \
+        else None
+    drift = jnp.float32(spec.drift_m_per_frame)
+    hover_e = jnp.float32(spec.hover_watts * spec.frame_s)
+    kappa = jnp.float32(spec.compute_j_per_mac)
+    p_fail = jnp.float32(spec.failure_prob)
+    p_recover = jnp.float32(spec.recovery_prob)
+
+    def rollout(pos0, charge0, alive0, waypoint, jitter, fail_u, recov_u,
+                forced, source, n_req):
+        on_trace()
+        B = pos0.shape[0]
+
+        def frame(carry, xs):
+            pos, alive, charge = carry
+            jit_t, fail_t, rec_t, dead_t, src_t, nreq_t = xs
+            # 1. mobility: bounded step toward the waypoint, plus jitter
+            to_wp = waypoint - pos
+            nrm = jnp.linalg.norm(to_wp, axis=-1, keepdims=True)
+            pos = pos + to_wp * jnp.minimum(1.0, drift / jnp.maximum(
+                nrm, 1e-9)) + jit_t
+            # 2. Bernoulli failure / recovery, then forced injections.
+            # Recovery applies to UAVs that entered the frame dead — a UAV
+            # failing THIS frame stays down at least one frame, so the
+            # observed per-frame failure rate is the documented
+            # failure_prob, not failure_prob * (1 - recovery_prob).
+            revived = ~alive & (rec_t < p_recover)
+            alive = (alive & (fail_t >= p_fail)) | revived
+            alive = alive & ~dead_t
+            # 3. battery gate: drained at the frame boundary => excluded
+            powered = charge > 0.0
+            active = alive & powered
+            # 4. request source, remapped to a survivor when down
+            first_active = jnp.argmax(active, axis=-1).astype(jnp.int32)
+            src_ok = jnp.take_along_axis(active, src_t[:, None], 1)[:, 0]
+            src = jnp.where(src_ok, src_t, first_active)
+            # 5. the fused planning tick, in-trace
+            p2_links = None if links_const is None else \
+                jnp.broadcast_to(links_const, (B, U, U))
+            pos, power, rate, assign, latency = solve(
+                pos, src, active, None, p2_links)
+            # 6. energy accounting + battery carry
+            macs, tx_time = _frame_energy(assign, src, power, rate,
+                                          compute_j, act_j, input_j)
+            e_cmp = kappa * macs * nreq_t[:, None]
+            e_tx = power * tx_time * nreq_t[:, None]
+            drain = jnp.where(active, e_cmp + e_tx + hover_e, 0.0)
+            charge = jnp.maximum(charge - drain, 0.0)
+            out = (pos, active, charge, latency, power.sum(-1),
+                   jnp.isfinite(latency), assign, src, e_tx, e_cmp)
+            return (pos, alive, charge), out
+
+        xs = (jitter, fail_u, recov_u, forced, source, n_req)
+        _, outs = jax.lax.scan(frame, (pos0, alive0, charge0), xs)
+        return outs
+
+    return jax.jit(rollout)
+
+
+# ---------------------------------------------------------------------------
+# Shared statistics helpers
+# ---------------------------------------------------------------------------
+
+
+def percentile_with_inf(latency: np.ndarray, q: float) -> float:
+    """Latency percentile across an ensemble, infeasible entries included as
+    inf — an SLO statistic must see outages: if the q-th order statistic
+    falls in the infeasible tail the result is inf, not a silently
+    optimistic number over the survivors.  (np.percentile alone would
+    interpolate with inf and return NaN.)"""
+    lat = np.sort(np.asarray(latency, dtype=np.float64).ravel())
+    if not lat.size:
+        return float("inf")
+    pos = q / 100.0 * (lat.size - 1)
+    lo = int(np.floor(pos))
+    frac = pos - lo
+    if frac == 0.0:                      # lands exactly on an element
+        return float(lat[lo])
+    if not np.isfinite(lat[lo + 1]):     # interpolating into the outage tail
+        return float("inf")
+    return float(lat[lo] + frac * (lat[lo + 1] - lat[lo]))
+
+
+__all__ = [
+    "PositionSpec", "RolloutSpec", "make_plan_fn", "make_rollout_fn",
+    "percentile_with_inf",
+]

@@ -1,29 +1,55 @@
 """Faithful UAV-swarm simulator (Section II + IV experimental setup).
 
-Time-framed simulation: each frame, UAVs generate RQ_i requests
-(sum_i RQ_i = RQ), the active planner produces positions/powers/placements,
-latency and energy are accounted, and optional failures trigger delegation.
-Device types follow Section IV: Raspberry-Pi-class devices, 1 GB RAM, with
+Time-framed simulation: each frame, the capturing UAV generates requests,
+the active planner produces positions/powers/placements, latency and energy
+are accounted, and failures (injected or drawn) trigger delegation.  Device
+types follow Section IV: Raspberry-Pi-class devices, 1 GB RAM, with
 per-second multiplication throughputs e_i in {560, 512, 256} (interpreted as
 MMACs/s per the cited Disabato et al. benchmark — raw ops/s would make even
 LeNet take hours, contradicting Fig. 3's second-scale latencies).
+
+``SwarmSim`` is now the B = 1 host-facing wrapper over the device-side
+fleet rollout (``repro.runtime.fleet_rollout.FleetRollout``): for an
+``LLHRPlanner`` the whole T-frame loop — mobility, failure injection,
+battery drain, and the fused P2 -> P1 -> P3 solve per frame — runs in ONE
+jit call.  The original per-frame host loop is kept verbatim as
+``run_legacy``, the parity oracle (``tests/test_rollout.py``) and the path
+the baseline planners still use.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import (Dict, List, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import numpy as np
 
-from repro.core.channel import RadioChannel, RadioParams
 from repro.core.cost_model import ModelCost
-from repro.core.placement import Device
+from repro.core.placement import Device, solve_chain_dp
 from repro.core.planner import LLHRPlanner, Plan
+from repro.core.rollout import PositionSpec, RolloutSpec
 
 # Section IV device throughputs (MMACs/s) and memory (1 GB RAM, of which a
 # fraction is available to weights).
 RPI_THROUGHPUTS = (560e6, 512e6, 256e6)
 RPI_MEM_BYTES = 1 << 30
+
+
+@runtime_checkable
+class SwarmPlanner(Protocol):
+    """The planner contract the simulator (and the rollout layer) dispatch
+    on: produce a full plan for one frame's requests at time ``t``.
+
+    Implemented by ``LLHRPlanner`` (time-invariant: it re-optimizes
+    positions instead of following a script, so ``t`` is ignored) and both
+    baselines (``HeuristicPlanner`` walks its static tour with ``t``,
+    ``RandomPlanner`` reseeds its draws with it).  Replaces the old
+    ``type(planner).__name__`` duck-typing: every planner takes the same
+    call, uniformly."""
+
+    def plan(self, model: ModelCost, devices: Sequence[Device],
+             requests: Sequence[int], *, t: int = 0
+             ) -> Tuple[Plan, list]: ...
 
 
 def make_devices(n: int, mem_frac: float = 1.0,
@@ -60,28 +86,104 @@ class FrameStats:
 @dataclass
 class SwarmSim:
     """Drives a planner over T time frames; the benchmark harness runs this
-    once per (planner, config) point to produce each figure."""
+    once per (planner, config) point to produce each figure.
+
+    ``backend``:
+
+    * ``"auto"``    — the device-side rollout when the planner is an
+                      ``LLHRPlanner`` solving placement with the chain DP
+                      (the solver the fused rollout implements — one jit
+                      call for all frames); the legacy host loop otherwise
+                      (a planner configured with another solver, e.g. the
+                      default exact branch-and-bound, keeps its semantics,
+                      and the baselines re-position per frame in ways only
+                      the scalar path models);
+    * ``"rollout"`` — force the rollout for any ``LLHRPlanner``; its
+                      configured ``placement_solver`` is SUBSTITUTED by
+                      the fused chain DP;
+    * ``"legacy"``  — force the host loop.
+
+    On the rollout path each frame serves ``requests_per_frame`` requests
+    from ONE capturing UAV (the paper's Section II-A source), per-request
+    latency is reported, and battery/mobility knobs (``jitter_sigma_m``,
+    ``battery_j``, ...) become live scenario axes.  The legacy loop keeps
+    the original semantics: multiple sources per frame sharing residual
+    caps across the request stream.
+    """
 
     model: ModelCost
     devices: List[Device]
-    planner: object                       # LLHR / Heuristic / Random planner
+    planner: SwarmPlanner                 # LLHR / Heuristic / Random planner
     requests_per_frame: int = 4
     seed: int = 0
     failure_frame: int = -1               # inject a UAV failure at this frame
     failure_uav: int = 0
+    backend: str = "auto"
+    jitter_sigma_m: float = 0.0           # rollout-only mobility jitter
+    battery_j: float = float("inf")       # rollout-only per-UAV battery
 
     def run(self, frames: int = 5) -> List[FrameStats]:
+        use_rollout = self.backend == "rollout" or (
+            self.backend == "auto"
+            and isinstance(self.planner, LLHRPlanner)
+            and self.planner.placement_solver is solve_chain_dp)
+        if not use_rollout:
+            return self.run_legacy(frames)
+        if not isinstance(self.planner, LLHRPlanner):
+            raise ValueError("the rollout backend plans with the fused LLHR "
+                             "solve; use backend='legacy' for baselines")
+        return self._run_rollout(frames)
+
+    # ------------------------------------------------------------------
+    def _run_rollout(self, frames: int) -> List[FrameStats]:
+        """ONE device call for the whole frame loop (B = 1 trajectory)."""
+        from repro.core.positions import hex_init
+        from repro.runtime.fleet_rollout import FleetRollout
+
+        planner = self.planner
+        U = len(self.devices)
+        spec = RolloutSpec(frames=frames,
+                           requests_per_frame=self.requests_per_frame,
+                           jitter_sigma_m=self.jitter_sigma_m,
+                           battery_j=self.battery_j)
+        p2 = PositionSpec(steps=planner.position_steps,
+                          radius=planner.radius) \
+            if planner.optimize_positions else None
+        rollout = FleetRollout(planner.channel, self.devices, self.model,
+                               spec, position_spec=p2, seed=self.seed)
+        # same RNG protocol as the legacy loop: one source draw per request
+        # per frame; the rollout serves the frame's first draw (Section
+        # II-A's capturing UAV), so requests_per_frame=1 replays the legacy
+        # stream exactly (the parity tests run in that configuration)
+        rng = np.random.default_rng(self.seed)
+        sources = np.stack([
+            rng.integers(0, U, size=self.requests_per_frame)[:1]
+            for _ in range(frames)])                       # [T, 1]
+        forced = [(self.failure_frame, self.failure_uav)] \
+            if 0 <= self.failure_frame < frames else None
+        base = hex_init(U, 2.0 * planner.radius, jitter=0.5,
+                        seed=planner.seed)
+        trace = rollout.run(base, n_trajectories=1, sources=sources,
+                            forced_failures=forced)
+        stats = trace.frame_stats(0)
+        for s in stats:                   # report the full arrival count
+            s.n_requests = self.requests_per_frame
+        return stats
+
+    # ------------------------------------------------------------------
+    def run_legacy(self, frames: int = 5) -> List[FrameStats]:
+        """The original per-frame host loop — one planner call per frame.
+
+        Kept as the rollout's parity oracle and as the only path for the
+        baseline planners (dispatched uniformly via ``SwarmPlanner``)."""
         rng = np.random.default_rng(self.seed)
         out: List[FrameStats] = []
         U = len(self.devices)
         for t in range(frames):
             # each UAV generates RQ_i requests, sum = RQ  (Section II-A)
             sources = rng.integers(0, U, size=self.requests_per_frame)
-            kwargs = {}
-            if type(self.planner).__name__ != "LLHRPlanner":
-                kwargs = {"t": t}
             plan, problems = self.planner.plan(
-                self.model, self.devices, list(sources), **kwargs)
+                self.model, self.devices, list(sources), t=t)
             replanned = False
             if t == self.failure_frame and isinstance(self.planner,
                                                       LLHRPlanner):
@@ -97,9 +199,45 @@ class SwarmSim:
         return out
 
 
+@dataclass(frozen=True)
+class LatencySummary:
+    """Latency statistics that cannot hide infeasible frames: the mean is
+    over feasible frames ONLY, and ``feasibility_rate`` says how many
+    frames that mean actually covers."""
+
+    mean_latency: float        # mean over feasible frames (inf when none)
+    feasibility_rate: float    # feasible frames / all frames
+    n_frames: int
+    n_feasible: int
+
+    def __str__(self) -> str:
+        return (f"{self.mean_latency:.4f} s over "
+                f"{100.0 * self.feasibility_rate:.0f}% feasible frames "
+                f"({self.n_feasible}/{self.n_frames})")
+
+
+def latency_summary(stats: Sequence[FrameStats]) -> LatencySummary:
+    """Mean per-request latency PLUS the feasibility rate it covers.
+
+    Figure-level numbers must report both: a mean over survivors alone
+    silently drops outage frames."""
+    lats = np.asarray([s.latency for s in stats], dtype=np.float64)
+    ok = np.isfinite(lats) & np.asarray([s.feasible for s in stats])
+    return LatencySummary(
+        mean_latency=float(lats[ok].mean()) if ok.any() else float("inf"),
+        feasibility_rate=float(ok.mean()) if len(stats) else 0.0,
+        n_frames=len(stats), n_feasible=int(ok.sum()))
+
+
 def average_latency(stats: Sequence[FrameStats]) -> float:
+    """Mean latency over feasible frames only — prefer ``latency_summary``,
+    which also reports how many frames were dropped as infeasible."""
     vals = [s.latency for s in stats if np.isfinite(s.latency)]
     return float(np.mean(vals)) if vals else float("inf")
+
+
+def feasibility_rate(stats: Sequence[FrameStats]) -> float:
+    return latency_summary(stats).feasibility_rate
 
 
 def average_power(stats: Sequence[FrameStats]) -> float:

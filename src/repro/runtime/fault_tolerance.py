@@ -28,15 +28,25 @@ class DeviceHealth:
     last_heartbeat: float = 0.0
     # exponentially-averaged step-time; stragglers show up here
     step_time_ema: float = 0.0
+    # last reported battery charge (J); a drained UAV is dead on arrival
+    charge: float = float("inf")
 
 
 class HealthTracker:
-    """Heartbeat + step-time tracking; classifies dead and straggling."""
+    """Heartbeat + step-time + battery tracking; classifies dead (missed
+    heartbeats OR drained battery) and straggling devices.
+
+    Battery death is the fleet rollout's third failure axis: a UAV whose
+    telemetry reports ``charge <= battery_floor_j`` is marked dead exactly
+    like a lapsed heartbeat, so the SAME delegation path (contingency
+    lookup, then live re-plan) absorbs it — no separate machinery."""
 
     def __init__(self, names: Sequence[str], timeout_s: float = 60.0,
-                 straggler_factor: float = 1.5):
+                 straggler_factor: float = 1.5,
+                 battery_floor_j: float = 0.0):
         self.timeout = timeout_s
         self.factor = straggler_factor
+        self.battery_floor = battery_floor_j
         self.devices = {n: DeviceHealth(n) for n in names}
 
     def heartbeat(self, name: str, step_time: float,
@@ -46,6 +56,11 @@ class HealthTracker:
         d.last_heartbeat = now
         d.step_time_ema = step_time if d.step_time_ema == 0 else \
             0.8 * d.step_time_ema + 0.2 * step_time
+
+    def battery(self, name: str, charge_j: float) -> None:
+        """Record a battery telemetry sample (e.g. a ``RolloutTrace``
+        charge row); ``scan`` classifies drained devices as dead."""
+        self.devices[name].charge = charge_j
 
     def scan(self, now: Optional[float] = None
              ) -> Tuple[List[str], List[str]]:
@@ -58,7 +73,10 @@ class HealthTracker:
         for d in self.devices.values():
             if not d.alive:
                 continue
-            if d.last_heartbeat and now - d.last_heartbeat > self.timeout:
+            if d.charge <= self.battery_floor:
+                d.alive = False
+                dead.append(d.name)
+            elif d.last_heartbeat and now - d.last_heartbeat > self.timeout:
                 d.alive = False
                 dead.append(d.name)
             elif median and d.step_time_ema > self.factor * median:
@@ -147,6 +165,19 @@ class FaultTolerantRunner:
         if self.contingency is not None and \
                 hasattr(self.contingency, "refresh"):
             self.contingency.refresh(positions, source=source)
+
+    def on_battery(self, charges: Dict[str, float],
+                   now: Optional[float] = None) -> Optional[object]:
+        """Feed battery telemetry (device name -> joules remaining, e.g. the
+        last frame of a ``RolloutTrace.charge``) and immediately scan: a
+        drained UAV becomes a failure the precomputed contingency path
+        absorbs like any other death.  Returns the new plan when anything
+        died, else None."""
+        for name, charge in charges.items():
+            if name in self.health.devices:
+                self.health.battery(name, float(charge))
+        dead, _ = self.health.scan(now)
+        return self.on_failure(dead) if dead else None
 
     def on_straggler(self, slow_names: Sequence[str]) -> object:
         """Demote straggler throughput and shift load away (re-plan)."""

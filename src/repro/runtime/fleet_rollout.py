@@ -1,0 +1,211 @@
+"""FleetRollout — the host-facing runtime layer over the device-side
+rollout scan (``repro.core.rollout``).
+
+A ``FleetRollout`` is a ``ScenarioEngine`` (same constants, same compiled
+fused plan, same ``PlanFnCache`` keys) that ALSO owns a compiled (B, T)
+rollout: mobility, failure/recovery, battery drain, request arrival and the
+fused P1->P2->P3 solve for every frame of every trajectory, in ONE jit call
+with zero host crossings between frames.  ``SwarmSim`` is its B = 1 wrapper;
+``benchmarks/fig2_*..fig5_*`` call it once per figure point; the
+``PeriodicReplanner`` uses it as a lookahead that prices a plan over the
+modelled dynamics, not just at the nominal state.
+
+All randomness is drawn host-side per ``run()`` (one ``numpy`` generator,
+shipped to the scan as inputs), which keeps the legacy host loop replayable
+as a per-frame parity oracle and makes a rollout reproducible from its seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.rollout import (RolloutSpec, make_rollout_fn,
+                                percentile_with_inf)
+from repro.runtime.scenario_engine import ScenarioEngine
+
+
+@dataclass
+class RolloutTrace:
+    """The full (B, T) rollout record, trajectory-major.
+
+    ``latency`` is PER-REQUEST end-to-end latency (inf = infeasible frame),
+    ``total_power`` the tightened used-links transmit power (W), ``charge``
+    the battery state AFTER each frame's drain, and ``active`` the UAVs the
+    frame actually planned over (alive AND powered)."""
+
+    latency: np.ndarray        # [B, T]
+    total_power: np.ndarray    # [B, T]
+    feasible: np.ndarray       # [B, T] bool
+    assign: np.ndarray         # [B, T, L] device ids (-1 = infeasible)
+    positions: np.ndarray      # [B, T, U, 2] planned (post-P2) positions
+    active: np.ndarray         # [B, T, U] bool
+    charge: np.ndarray         # [B, T, U] J
+    source: np.ndarray         # [B, T] remapped capturing UAV
+    n_requests: np.ndarray     # [B, T]
+    energy_tx: np.ndarray      # [B, T, U] J
+    energy_cmp: np.ndarray     # [B, T, U] J
+
+    @property
+    def n_trajectories(self) -> int:
+        return self.latency.shape[0]
+
+    @property
+    def n_frames(self) -> int:
+        return self.latency.shape[1]
+
+    @property
+    def feasibility_rate(self) -> float:
+        """Fraction of (trajectory, frame) points with a feasible plan."""
+        return float(self.feasible.mean()) if self.feasible.size else 0.0
+
+    @property
+    def mean_latency(self) -> float:
+        """Mean per-request latency over FEASIBLE frames (inf when none) —
+        always read next to ``feasibility_rate``: the mean alone can hide
+        an arbitrarily broken fleet."""
+        vals = self.latency[self.feasible]
+        return float(vals.mean()) if vals.size else float("inf")
+
+    @property
+    def mean_power(self) -> float:
+        return float(self.total_power.mean()) if self.total_power.size \
+            else 0.0
+
+    def latency_percentile(self, q: float) -> float:
+        """Ensemble percentile over ALL (trajectory, frame) points,
+        infeasible frames included as inf (outages must show up in SLOs)."""
+        return percentile_with_inf(self.latency, q)
+
+    def frame_stats(self, trajectory: int = 0) -> List["FrameStats"]:
+        """One trajectory as the legacy ``SwarmSim`` per-frame records.
+
+        ``replanned`` marks frames where the planned-over UAV set shrank
+        (failure or battery death) — the moment the contingency semantics
+        absorbed a loss."""
+        from repro.core.swarm import FrameStats
+        b = trajectory
+        out: List[FrameStats] = []
+        prev_active = None
+        for t in range(self.n_frames):
+            act = self.active[b, t]
+            shrank = prev_active is not None and bool(
+                (prev_active & ~act).any())
+            prev_active = act
+            out.append(FrameStats(
+                t=t, latency=float(self.latency[b, t]),
+                power=float(self.total_power[b, t]),
+                breakdown={"e_tx": float(self.energy_tx[b, t].sum()),
+                           "e_compute": float(self.energy_cmp[b, t].sum())},
+                n_requests=int(self.n_requests[b, t]),
+                feasible=bool(self.feasible[b, t]), replanned=shrank))
+        return out
+
+
+class FleetRollout(ScenarioEngine):
+    """Batched multi-frame swarm simulation, fully on device.
+
+    Extends ``ScenarioEngine`` with a compiled rollout callable resolved
+    through the same ``PlanFnCache``: the rollout's cache key is the fused
+    plan's static signature plus the ``RolloutSpec`` dynamics constants, so
+    rebuilding a ``FleetRollout`` (a new ``SwarmSim``, a benchmark rerun, a
+    replanner lookahead) never re-traces.  The scan length T comes from the
+    input arrays — a different horizon re-executes the same callable (one
+    retrace per new (B, T) shape, counted by ``trace_count``).
+    """
+
+    def __init__(self, channel, devices, model, spec: RolloutSpec,
+                 device_order=None, act_scale: float = 1.0,
+                 plan_cache=None, position_spec=None, seed: int = 0):
+        super().__init__(channel, devices, model, device_order=device_order,
+                         act_scale=act_scale, plan_cache=plan_cache,
+                         position_spec=position_spec)
+        self.spec = spec
+        self._rng = np.random.default_rng(seed)
+        rollout_key = ("rollout", spec.key()) + self._cache_key()[1:]
+        self._cache_keys_used = self._cache_keys_used + (rollout_key,)
+        self._rollout = self.plan_cache.get(rollout_key, partial(
+            make_rollout_fn, params=self.params, compute=self.compute,
+            memory=self.memory, act_bits=self.act_bits,
+            input_bits=self.input_bits, mem_cap=self.mem_cap,
+            compute_cap=self.compute_cap, throughput=self.throughput,
+            order=self.order, spec=spec, p2=self.position_spec))
+
+    # ------------------------------------------------------------------
+    def run(self, base_positions: np.ndarray, n_trajectories: int = 1,
+            frames: Optional[int] = None,
+            charge0: Optional[np.ndarray] = None,
+            alive0: Optional[np.ndarray] = None,
+            forced_failures: Optional[Sequence[Tuple[int, int]]] = None,
+            sources: Optional[np.ndarray] = None,
+            waypoints: Optional[np.ndarray] = None) -> RolloutTrace:
+        """Roll B trajectories forward T frames in one device call.
+
+        ``base_positions``: [U, 2] (tiled over trajectories) or [B, U, 2].
+        ``forced_failures``: (frame, uav) pairs — the UAV is dead from that
+        frame on in EVERY trajectory (the simulator's injection hook).
+        ``sources``: optional [T, B] capturing-UAV draws (default: uniform
+        over the swarm, remapped in-trace to a survivor).
+        ``waypoints``: optional [B, U, 2] drift targets (default: drawn in
+        ``spec.waypoint_range_m`` around each UAV's start, or the start
+        itself when the range is 0 — pure jitter mobility).
+        """
+        import jax.numpy as jnp
+
+        U = len(self.devices)
+        B = n_trajectories
+        T = self.spec.frames if frames is None else frames
+        rng = self._rng
+        base = np.asarray(base_positions, np.float64)
+        pos0 = np.broadcast_to(base, (B, U, 2)).astype(np.float32).copy() \
+            if base.ndim == 2 else base.astype(np.float32)
+        if waypoints is None:
+            waypoints = pos0.copy()
+            if self.spec.waypoint_range_m > 0:
+                waypoints = waypoints + rng.uniform(
+                    -self.spec.waypoint_range_m, self.spec.waypoint_range_m,
+                    size=(B, U, 2)).astype(np.float32)
+        jitter = np.zeros((T, B, U, 2), np.float32)
+        if self.spec.jitter_sigma_m > 0:
+            jitter = rng.normal(scale=self.spec.jitter_sigma_m,
+                                size=(T, B, U, 2)).astype(np.float32)
+        fail_u = rng.random((T, B, U)).astype(np.float32)
+        recov_u = rng.random((T, B, U)).astype(np.float32)
+        forced = np.zeros((T, B, U), dtype=bool)
+        for f, u in (forced_failures or ()):
+            if 0 <= f < T:
+                forced[f:, :, u] = True
+        if sources is None:
+            sources = rng.integers(0, U, size=(T, B))
+        sources = np.asarray(sources, np.int32).reshape(T, B)
+        n_req = np.full((T, B), self.spec.requests_per_frame, np.float32)
+        if charge0 is None:
+            charge0 = np.full((B, U), self.spec.battery_j, np.float32)
+        else:
+            charge0 = np.broadcast_to(
+                np.asarray(charge0, np.float32), (B, U)).copy()
+        if alive0 is None:
+            alive0 = np.ones((B, U), dtype=bool)
+
+        (pos, active, charge, latency, power, feasible, assign, src,
+         e_tx, e_cmp) = self._rollout(
+            jnp.asarray(pos0), jnp.asarray(charge0), jnp.asarray(alive0),
+            jnp.asarray(waypoints, jnp.float32), jnp.asarray(jitter),
+            jnp.asarray(fail_u), jnp.asarray(recov_u), jnp.asarray(forced),
+            jnp.asarray(sources), jnp.asarray(n_req))
+
+        def tm(x, dtype=np.float64):        # [T, B, ...] -> [B, T, ...]
+            arr = np.asarray(x)
+            return np.swapaxes(arr, 0, 1).astype(dtype)
+
+        return RolloutTrace(
+            latency=tm(latency), total_power=tm(power),
+            feasible=tm(feasible, bool), assign=tm(assign, np.int64),
+            positions=tm(pos), active=tm(active, bool), charge=tm(charge),
+            source=tm(src, np.int64), n_requests=tm(n_req, np.int64),
+            energy_tx=tm(e_tx), energy_cmp=tm(e_cmp))
+
+
+__all__ = ["FleetRollout", "RolloutTrace", "RolloutSpec"]

@@ -36,14 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import (_chain_dp_solve, _positions_pgd, chain_links,
-                              coverage_radius, links_from_assignment_batched,
-                              pairwise_dist_batched, position_coeff,
-                              power_threshold_batched, rate_matrix_batched,
-                              solve_power_batched)
+from repro.core.batch import chain_links
 from repro.core.channel import RadioChannel, RadioParams
 from repro.core.cost_model import ModelCost
 from repro.core.placement import Device
+from repro.core.rollout import PositionSpec, make_plan_fn, percentile_with_inf
 
 
 # ---------------------------------------------------------------------------
@@ -219,72 +216,26 @@ class PlanFnCache:
 PLAN_FN_CACHE = PlanFnCache()
 
 
-@dataclass(frozen=True)
-class PositionSpec:
-    """Static P2 hyperparameters for the fused planner.
-
-    Part of the compiled-plan cache key: engines sharing (problem signature,
-    spec) share ONE compiled plan; changing any field compiles a new one.
-    """
-
-    steps: int = 300           # projected-gradient iterations
-    lr: float = 0.5            # normalized-gradient step size (m)
-    radius: float = 20.0       # UAV coverage radius R (eq. 8c/8d)
-    repair_iters: int = 50     # device-side push-apart iterations
-
-    def key(self) -> tuple:
-        return ("p2", self.steps, self.lr, self.radius, self.repair_iters)
-
-
 def _build_solve_fn(on_trace, *, params: RadioParams, compute, memory,
                     act_bits, input_bits, mem_cap, compute_cap, throughput,
                     order: Tuple[int, ...],
                     p2: Optional[PositionSpec] = None):
-    """One fused jit — the WHOLE planning tick on device:
+    """One fused jit — the WHOLE planning tick on device.
 
-        (P2 positions from the input initializations, when ``p2`` is set)
-        -> pairwise distances -> P1 powers -> eq. (5) rates
-        -> chain-DP placement (solve + device-side backtrack)
-        -> used-links mask from the assignment -> tightened P1 powers.
+    The actual pipeline lives in ``repro.core.rollout.make_plan_fn`` (it is
+    the same pure function the fleet rollout embeds inside its frame scan);
+    this wrapper only adds the retrace counter and the jit boundary the
+    engine's ``plan_batch`` calls through."""
+    solve = make_plan_fn(params=params, compute=compute, memory=memory,
+                         act_bits=act_bits, input_bits=input_bits,
+                         mem_cap=mem_cap, compute_cap=compute_cap,
+                         throughput=throughput, order=order, p2=p2)
 
-    Nothing crosses the host boundary between stages: the used-links
-    tightening (the scalar planner's ``min_power_for_placement``) consumes
-    the assignment straight from the DP backtrack via
-    ``links_from_assignment_batched``, and reuses the eq. (7) thresholds
-    computed for the first P1 pass."""
-    compute = jnp.asarray(compute, jnp.float32)
-    memory = jnp.asarray(memory, jnp.float32)
-    act_bits = jnp.asarray(act_bits, jnp.float32)
-    input_bits = jnp.float32(input_bits)
-    mem_cap = jnp.asarray(mem_cap, jnp.float32)
-    compute_cap = jnp.asarray(compute_cap, jnp.float32)
-    throughput = jnp.asarray(throughput, jnp.float32)
-    U = int(mem_cap.shape[0])
-
-    def solve(positions, source, active, gain_scale, p2_links):
+    def traced(positions, source, active, gain_scale, p2_links):
         on_trace()
-        if p2 is not None:
-            positions, _, _, _ = _positions_pgd(
-                positions, p2_links,
-                jnp.float32(position_coeff(params)), jnp.float32(p2.lr),
-                jnp.float32(2.0 * p2.radius),
-                jnp.float32(coverage_radius(U, p2.radius)),
-                positions.mean(axis=1), p2.steps, p2.repair_iters)
-        dist = pairwise_dist_batched(positions)
-        th = power_threshold_batched(dist, params, gain_scale=gain_scale)
-        pw = solve_power_batched(dist, params, active=active,
-                                 gain_scale=gain_scale, threshold_matrix=th)
-        rate = rate_matrix_batched(dist, pw.power, params, pw.link_feasible,
-                                   gain_scale=gain_scale)
-        assign, latency = _chain_dp_solve(
-            compute, memory, act_bits, input_bits, mem_cap, compute_cap,
-            throughput, rate, source, active, order)
-        used = links_from_assignment_batched(assign, source, U)
-        power = solve_power_batched(dist, params, links=used, active=active,
-                                    threshold_matrix=th).power
-        return positions, power, rate, assign, latency
+        return solve(positions, source, active, gain_scale, p2_links)
 
-    return jax.jit(solve)
+    return jax.jit(traced)
 
 
 # ---------------------------------------------------------------------------
@@ -330,21 +281,9 @@ class BatchPlan:
 
     def latency_percentile(self, q: float) -> float:
         """Latency percentile across the WHOLE ensemble, infeasible scenarios
-        included as inf — an SLO statistic must see outages: if the q-th
-        order statistic falls in the infeasible tail the result is inf, not
-        a silently optimistic number over the survivors.  (np.percentile
-        alone would interpolate with inf and return NaN.)"""
-        if not self.latency.size:
-            return float("inf")
-        lat = np.sort(self.latency)
-        pos = q / 100.0 * (lat.size - 1)
-        lo = int(np.floor(pos))
-        frac = pos - lo
-        if frac == 0.0:                      # lands exactly on an element
-            return float(lat[lo])
-        if not np.isfinite(lat[lo + 1]):     # interpolating into the outage tail
-            return float("inf")
-        return float(lat[lo] + frac * (lat[lo + 1] - lat[lo]))
+        included as inf — an SLO statistic must see outages (see
+        ``repro.core.rollout.percentile_with_inf``)."""
+        return percentile_with_inf(self.latency, q)
 
 
 class ScenarioEngine:

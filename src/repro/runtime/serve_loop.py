@@ -160,18 +160,32 @@ class PeriodicReplanner:
     follows the optimized positions, so no solved position ever crosses the
     host boundary on its way into the next plan.
 
+    With a ``rollout`` (a ``repro.runtime.fleet_rollout.FleetRollout``) and
+    ``rollout_horizon > 0``, every refresh additionally rolls the nominal
+    state ``rollout_horizon`` frames FORWARD over ``rollout_trajectories``
+    Monte-Carlo futures — mobility drift, failures, battery drain — in one
+    more device call.  The scenario batch prices the plan's robustness NOW;
+    the horizon prices where the fleet is heading (``horizon_feasibility``,
+    ``horizon_latency``), which is what decides proactive re-positioning.
+
     ``engine``/``generator`` come from ``repro.runtime.scenario_engine``.
     """
 
     def __init__(self, engine, generator, period: int = 10,
                  n_scenarios: int = 128, source: int = 0,
-                 adopt_positions: bool = True):
+                 adopt_positions: bool = True,
+                 rollout=None, rollout_horizon: int = 0,
+                 rollout_trajectories: int = 32):
         self.engine = engine
         self.generator = generator
         self.period = max(1, period)
         self.n_scenarios = n_scenarios
         self.source = source
         self.adopt_positions = adopt_positions
+        self.rollout = rollout
+        self.rollout_horizon = rollout_horizon
+        self.rollout_trajectories = rollout_trajectories
+        self.horizon = None        # RolloutTrace of the last lookahead
         self.plan = None           # BatchPlan of the last refresh
         self.refreshes = 0
         self.last_refresh_s = 0.0  # wall-clock of the latest plan_batch call
@@ -197,16 +211,29 @@ class PeriodicReplanner:
         if batch.gain_scale is not None:
             batch.gain_scale[0] = 1.0
         batch.source[0] = self.source
-        trace_before = getattr(self.engine, "trace_count", 0)
+
+        def traces() -> int:
+            # count each (cache, key) once: the rollout inherits the
+            # engine's fused-solve key, and naively summing trace_count
+            # would double-count a shared retrace
+            seen, total = set(), 0
+            for e in (self.engine, self.rollout):
+                if e is None:
+                    continue
+                cache = getattr(e, "plan_cache", None)
+                keys = getattr(e, "_cache_keys_used", None)
+                if cache is None or keys is None:
+                    total += getattr(e, "trace_count", 0)
+                    continue
+                for k in keys:
+                    if (id(cache), k) not in seen:
+                        seen.add((id(cache), k))
+                        total += cache.traces.get(k, 0)
+            return total
+
+        trace_before = traces()
         t0 = time.perf_counter()
         self.plan = self.engine.plan_batch(batch)
-        self.last_refresh_s = time.perf_counter() - t0
-        if self.refreshes > 0:
-            # only traces paid DURING this refresh count: another engine
-            # sharing the process-wide cache key must not show up here
-            self._retraces += (getattr(self.engine, "trace_count", 0)
-                               - trace_before)
-        self.refreshes += 1
         if (self.adopt_positions and self.plan.positions is not None
                 and getattr(self.engine, "position_spec", None) is not None):
             # the fused P2 solved where the swarm should fly; make that the
@@ -214,6 +241,19 @@ class PeriodicReplanner:
             # starts from
             self.generator.base_positions = np.asarray(
                 self.plan.positions[0], np.float64)
+        if self.rollout is not None and self.rollout_horizon > 0:
+            # lookahead: roll the (possibly adopted) nominal state forward
+            # under the modelled dynamics — one more device call
+            self.horizon = self.rollout.run(
+                self.generator.base_positions,
+                n_trajectories=self.rollout_trajectories,
+                frames=self.rollout_horizon)
+        self.last_refresh_s = time.perf_counter() - t0
+        if self.refreshes > 0:
+            # only traces paid DURING this refresh count: another engine
+            # sharing the process-wide cache key must not show up here
+            self._retraces += traces() - trace_before
+        self.refreshes += 1
         return True
 
     @property
@@ -252,3 +292,18 @@ class PeriodicReplanner:
         costs under the modelled dynamics, not just at the nominal state."""
         return self.plan.latency_percentile(q) if self.plan is not None \
             else float("inf")
+
+    # ------------------------------------------------------------------
+    @property
+    def horizon_feasibility(self) -> float:
+        """Fraction of (trajectory, frame) points in the rollout lookahead
+        that stay feasible — the fleet's forward health, 0.0 before the
+        first refresh (or without a rollout attached)."""
+        return self.horizon.feasibility_rate if self.horizon is not None \
+            else 0.0
+
+    def horizon_latency(self, q: float = 95.0) -> float:
+        """Latency percentile over the WHOLE lookahead ensemble (every
+        frame of every rolled-out future, outages included as inf)."""
+        return self.horizon.latency_percentile(q) \
+            if self.horizon is not None else float("inf")

@@ -207,6 +207,79 @@ class TestBatchedPositionProperties:
         assert (np.diff(sol.objective_trace, axis=1) <= 0.0).all()
 
 
+class TestRolloutBatteryProperties:
+    """Invariants of the battery carry in the device-side fleet rollout.
+
+    The rollout engine and its shapes are FIXED across examples (spec
+    constants are baked into the trace, so varying them would force an XLA
+    recompile per example); hypothesis varies only data — initial charge
+    levels and the RNG draws behind mobility, failures, and sources.
+    """
+
+    B, T, U = 3, 5, 4
+    _rollout = None
+
+    @classmethod
+    def rollout(cls):
+        if cls._rollout is None:
+            from repro.core import RolloutSpec, cnn_cost, make_devices
+            from repro.configs.lenet import LENET
+            from repro.runtime.fleet_rollout import FleetRollout
+            from repro.runtime.scenario_engine import PlanFnCache
+            spec = RolloutSpec(frames=cls.T, requests_per_frame=2,
+                               jitter_sigma_m=2.0, failure_prob=0.15,
+                               recovery_prob=0.2, hover_watts=0.05,
+                               frame_s=1.0)
+            cls._rollout = FleetRollout(
+                RadioChannel(), make_devices(cls.U), cnn_cost(LENET), spec,
+                plan_cache=PlanFnCache(), seed=0)
+        return cls._rollout
+
+    def _trace(self, charge_scale, seed):
+        from repro.core.positions import hex_init
+        rng = np.random.default_rng(seed)
+        charge0 = (charge_scale *
+                   rng.uniform(0.0, 1.0, (self.B, self.U))).astype(np.float32)
+        trace = self.rollout().run(hex_init(self.U, 40.0, jitter=1.0,
+                                            seed=seed % 1000),
+                                   n_trajectories=self.B, charge0=charge0)
+        return trace, charge0
+
+    @given(st.floats(0.05, 10.0), st.integers(0, 2 ** 31))
+    @settings(max_examples=10, deadline=None)
+    def test_charge_monotone_nonincreasing_and_nonnegative(self, scale,
+                                                           seed):
+        trace, charge0 = self._trace(scale, seed)
+        assert (trace.charge >= 0.0).all()
+        assert (trace.charge[:, 0] <= charge0 + 1e-6).all()
+        assert (np.diff(trace.charge, axis=1) <= 1e-6).all()
+
+    @given(st.floats(0.05, 10.0), st.integers(0, 2 ** 31))
+    @settings(max_examples=10, deadline=None)
+    def test_dead_uav_excluded_from_placement(self, scale, seed):
+        """A UAV entering a frame with zero charge is inactive there and
+        never hosts a layer or captures the request."""
+        trace, _ = self._trace(scale, seed)
+        for b in range(self.B):
+            for t in range(1, self.T):
+                dead = trace.charge[b, t - 1] <= 0.0
+                assert not trace.active[b, t][dead].any()
+                for u in np.flatnonzero(dead):
+                    assert (trace.assign[b, t] != u).all()
+                    assert trace.source[b, t] != u or not np.isfinite(
+                        trace.latency[b, t])
+
+    @given(st.floats(0.05, 10.0), st.integers(0, 2 ** 31))
+    @settings(max_examples=10, deadline=None)
+    def test_energy_nonnegative_and_only_from_active(self, scale, seed):
+        trace, _ = self._trace(scale, seed)
+        assert (trace.energy_tx >= 0.0).all()
+        assert (trace.energy_cmp >= 0.0).all()
+        # an inactive UAV spends nothing
+        inactive = ~trace.active
+        assert np.allclose(trace.energy_cmp[inactive], 0.0)
+
+
 class TestCheckpointProperties:
     @given(st.lists(st.integers(1, 6), min_size=1, max_size=3),
            st.integers(0, 2 ** 31))
