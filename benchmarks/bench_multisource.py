@@ -1,0 +1,241 @@
+"""Benchmark: the batched multi-source solve vs S per-source solves.
+
+The multi-source planning tick (``ScenarioEngine.plan_batch_multi``) serves
+a frame's WHOLE Section II-A request stream in ONE fused device call: the
+chain DP vmapped over the source axis (geometry, P1 and the eq. 5 rates
+computed once and shared), plus the exact shared-cap pass pricing the
+stream's aggregate per-UAV MACs against the un-split eq. 11b period
+budget.  Two sections, one JSON (``BENCH_multisource.json``):
+
+* ``multisource`` — one ``plan_batch_multi`` call (B scenarios x S = U
+  sources) against the same work done as S single-source ``plan_batch``
+  calls (the pre-ISSUE-5 recipe for covering every capturing UAV).  Exact
+  per-source agreement (latency + assignment) is asserted.  The fused
+  call shares the P2/P1/rate geometry across sources and pays ONE
+  dispatch instead of S — a multiple-x win at replanner-scale batches
+  (dispatch-bound) and never slower at large B (both sides become
+  DP-compute-bound) — while ALSO running the exact shared-cap pass the
+  per-source loop cannot price at all.
+* ``split_caps_gap`` — the retired 1/RQ fair-share approximation
+  (``benchmarks/common.split_caps``) against the exact aggregate pricing
+  on a compute-contended fleet: the fair share splits every cap by RQ and
+  solves ONE representative request, which mis-prices streams whose
+  placements do not overlap uniformly.  The JSON records where the two
+  disagree on feasibility — the figure-level error the exact pass removes.
+
+All timed regions end with ``jax.block_until_ready``; zero retraces across
+repeated calls is asserted.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_multisource.py
+        [--batch 256] [--uavs 8] [--smoke] [--json BENCH_multisource.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+import numpy as np
+
+import jax
+
+# allow `python benchmarks/bench_multisource.py` from the repo root
+# (sys.path[0] is then benchmarks/, not the root holding the package)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import split_caps  # noqa: E402
+from repro.configs.lenet import LENET
+from repro.core import (RadioChannel, RadioParams, cnn_cost, make_devices)
+from repro.core.placement import Device
+from repro.core.positions import hex_init
+from repro.core.swarm import RPI_MEM_BYTES
+from repro.runtime.scenario_engine import (PlanFnCache, ScenarioBatch,
+                                           ScenarioEngine)
+
+PARAMS = RadioParams()
+CH = RadioChannel(PARAMS)
+
+
+def _batch(n_scenarios: int, n_uavs: int, seed: int = 0) -> ScenarioBatch:
+    rng = np.random.default_rng(seed)
+    base = hex_init(n_uavs, 40.0, jitter=0.5, seed=seed)
+    pos = base[None] + rng.normal(scale=2.0, size=(n_scenarios, n_uavs, 2))
+    return ScenarioBatch(positions=pos,
+                         source=np.zeros(n_scenarios, np.int64))
+
+
+def bench_multisource(batch: int, uavs: int, repeats: int) -> Dict:
+    """One fused multi-source call vs S = U single-source calls."""
+    mc = cnn_cost(LENET)
+    devs = make_devices(uavs)
+    engine = ScenarioEngine(CH, devs, mc, plan_cache=PlanFnCache())
+    scen = _batch(batch, uavs)
+    rng = np.random.default_rng(1)
+    n_req = rng.multinomial(uavs, np.full(uavs, 1.0 / uavs),
+                            size=batch).astype(np.float64)
+
+    def run_multi():
+        plan = engine.plan_batch_multi(scen, n_req)
+        jax.block_until_ready((plan.latency,))
+        return plan
+
+    def run_per_source():
+        plans = []
+        for s in range(uavs):
+            sb = ScenarioBatch(positions=scen.positions,
+                               source=np.full(batch, s, np.int64))
+            plans.append(engine.plan_batch(sb))
+        jax.block_until_ready(tuple(p.latency for p in plans))
+        return plans
+
+    multi = run_multi()                    # warm-up: trace + compile
+    singles = run_per_source()
+    traces_after_warm = engine.trace_count
+
+    t_multi, t_single = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        multi = run_multi()
+        t_multi.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        singles = run_per_source()
+        t_single.append(time.perf_counter() - t0)
+    retraces = engine.trace_count - traces_after_warm
+
+    # exact per-source agreement: the vmapped DP IS the single-source DP
+    max_lat_err = 0.0
+    assign_agree = True
+    for s, single in enumerate(singles):
+        a, b = multi.source_latency[:, s], single.latency
+        finite = np.isfinite(b)
+        assert (np.isfinite(a) == finite).all()
+        if finite.any():
+            max_lat_err = max(max_lat_err, float(np.max(
+                np.abs(a[finite] - b[finite]) / b[finite])))
+        assign_agree &= bool((multi.assign[:, s] == single.assign).all())
+
+    multi_s = float(np.min(t_multi))
+    single_s = float(np.min(t_single))
+    return {
+        "batch": batch, "uavs": uavs, "sources": uavs,
+        "multi_call_s": multi_s, "per_source_loop_s": single_s,
+        "speedup_vs_per_source_loop": single_s / multi_s,
+        "solves_per_s": batch * uavs / multi_s,
+        "retraces_after_first": retraces,
+        "max_latency_rel_err": max_lat_err,
+        "assignments_agree": assign_agree,
+        "feasibility_rate": float(multi.feasible.mean()),
+        "cap_feasibility_rate": float(multi.cap_feasible.mean()),
+    }
+
+
+def bench_split_caps_gap(uavs: int, requests: int) -> Dict:
+    """The retired 1/RQ fair share vs exact aggregate pricing.
+
+    A compute-contended fleet (every cap = 2.4x the model's MACs) serving
+    RQ requests from one capturing UAV: the exact pass prices the stream's
+    true aggregate (RQ x the placement's MACs per UAV, infeasible once it
+    exceeds any cap), while the fair share solves ONE request against
+    caps/RQ — a different, generally wrong, feasibility region.
+    """
+    mc = cnn_cost(LENET)
+    total = float(sum(l.flops for l in mc.layers))
+    devs = [Device(f"uav{i}", RPI_MEM_BYTES, 2.4 * total, 512e6)
+            for i in range(uavs)]
+    pos = hex_init(uavs, 40.0, jitter=0.5, seed=2)
+    scen = ScenarioBatch(positions=pos[None],
+                         source=np.zeros(1, np.int64))
+    n_req = np.zeros((1, uavs))
+    n_req[0, 0] = requests                 # the whole stream from UAV 0
+
+    exact_engine = ScenarioEngine(CH, devs, mc, plan_cache=PlanFnCache())
+    exact = exact_engine.plan_batch_multi(scen, n_req)
+
+    split_engine = ScenarioEngine(CH, split_caps(devs, requests), mc,
+                                  plan_cache=PlanFnCache())
+    approx = split_engine.plan_batch(scen)
+
+    return {
+        "uavs": uavs, "requests": requests,
+        "cap_x_model_macs": 2.4,
+        "exact_feasible": bool(exact.feasible[0]),
+        "exact_cap_feasible": bool(exact.cap_feasible[0]),
+        "exact_latency_s": float(exact.latency[0]),
+        "split_caps_feasible": bool(np.isfinite(approx.latency[0])),
+        "split_caps_latency_s": float(approx.latency[0]),
+        "feasibility_disagrees": bool(
+            exact.feasible[0] != np.isfinite(approx.latency[0])),
+    }
+
+
+def run(batch: int = 256, uavs: int = 8, repeats: int = 5,
+        smoke: bool = False) -> Dict:
+    result: Dict = {
+        "benchmark": "multisource",
+        "backend": jax.default_backend(),
+        "config": {"batch": batch, "uavs": uavs, "repeats": repeats,
+                   "smoke": smoke},
+    }
+
+    ms = bench_multisource(batch, uavs, repeats)
+    result["multisource"] = ms
+    print(f"multisource : B={batch} S=U={uavs}: one call "
+          f"{ms['multi_call_s'] * 1e3:.1f} ms vs per-source loop "
+          f"{ms['per_source_loop_s'] * 1e3:.1f} ms -> "
+          f"{ms['speedup_vs_per_source_loop']:.1f}x "
+          f"({ms['solves_per_s']:.0f} DP solves/s, "
+          f"{ms['retraces_after_first']} retraces)")
+    print(f"agreement   : assignments {ms['assignments_agree']}, max "
+          f"latency rel err {ms['max_latency_rel_err']:.2e}")
+
+    gap = bench_split_caps_gap(max(3, min(uavs, 4)), requests=4)
+    result["split_caps_gap"] = gap
+    print(f"cap pricing : exact feasible={gap['exact_feasible']} vs "
+          f"split_caps feasible={gap['split_caps_feasible']} "
+          f"(disagree={gap['feasibility_disagrees']}) on a "
+          f"compute-contended fleet")
+
+    assert ms["retraces_after_first"] == 0, \
+        "multi-source plan retraced across repeated calls"
+    assert ms["assignments_agree"], "vmapped DP diverged from per-source DP"
+    assert ms["max_latency_rel_err"] < 1e-5, "per-source latency drifted"
+    assert gap["feasibility_disagrees"], \
+        "the 1/RQ fair share should mis-price this contended stream"
+    if not smoke:
+        # exactness must be free: one fused call (which ALSO prices the
+        # shared cap) must not lose to S dispatches of the same DP work
+        assert ms["speedup_vs_per_source_loop"] >= 0.85, \
+            "fused multi-source call lost to the per-source loop"
+        print("PASS: exact agreement, 0 retraces, exact cap pricing at "
+              "no extra cost vs the per-source loop")
+    return result
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--uavs", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run; no speedup asserts")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the result dict to this path")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cfg = dict(batch=8, uavs=4, repeats=2, smoke=True)
+    else:
+        cfg = dict(batch=args.batch, uavs=args.uavs, repeats=args.repeats)
+    result = run(**cfg)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -61,22 +61,22 @@ def run_planner(planner_kind: str, model: str, n_uavs: int, requests: int,
 
 
 def split_caps(devices, requests: int):
-    """Fair-share the per-period COMPUTE budget over a frame's requests.
+    """LEGACY-ONLY: fair-share the per-period COMPUTE budget over a
+    frame's requests by dividing every eq. 11b cap by RQ.
 
-    The legacy planner shares residual caps ACROSS a frame's request
-    stream; the fused rollout solves one representative request per frame,
-    so each request gets its 1/RQ share of the eq. 11b budget
-    (\\bar{c}_i = e_i * frame_s is genuinely consumed per request served).
+    This was the stop-gap the figure scripts used while the rollout served
+    only ONE capturing UAV per frame: a single representative request got
+    its 1/RQ share of the period budget.  The rollout now serves the whole
+    Section II-A request stream in-trace — one chain-DP placement per
+    capturing UAV, with the frame's AGGREGATE per-UAV MACs priced exactly
+    against the un-split eq. 11b budget — so no figure path calls this any
+    more.  It is kept only as the documented legacy comparison
+    (``benchmarks/bench_multisource.py`` quantifies the gap between the
+    1/RQ approximation and the exact shared-cap accounting).
 
-    The eq. 11a memory cap is NOT split.  The legacy stream allocates
-    memory elastically (a request may take a whole device for its biggest
-    FC layer while others squeeze elsewhere), and the figure trends do not
-    come from memory contention at all: fig. 2/4's P_max and bandwidth
-    curves come from the single-host-on-source fallback (link-free but
-    stuck on the capturing UAV's throughput) giving way to splits toward
-    faster devices once reliable links open up, and fig. 3's knee comes
-    from the per-request cap sweep itself.  A 1/RQ memory slice would
-    outlaw the fallback and any layer bigger than mem_cap/RQ — placements
+    The eq. 11a memory cap was never split: the legacy stream allocates
+    memory elastically, and a 1/RQ memory slice would outlaw the
+    single-host fallback and any layer bigger than mem_cap/RQ — placements
     the paper's ILP happily finds."""
     if requests <= 1:
         return list(devices)
@@ -89,8 +89,10 @@ def run_rollout(model: str, n_uavs: int, requests: int, params: RadioParams,
                 mem_frac: float = 1.0, seed: int = 0,
                 radius: float = 20.0):
     """ONE device call per figure point: a (B=1, T=frames) fleet rollout
-    with mild mobility jitter, the fused P2 -> P1 -> P3 solve per frame,
-    and the per-period caps split over the frame's request stream.
+    with mild mobility jitter and the fused P2 -> P1 -> P3 solve per
+    frame, serving the frame's WHOLE multi-source request stream
+    (``requests`` arrivals drawn over the swarm per frame, shared caps
+    priced exactly — no ``split_caps`` fair-share approximation).
 
     -> (trace, wall_us) — wall time is the STEADY-STATE rollout call: a
     warm-up run pays the per-signature trace/compile first (every figure
@@ -100,7 +102,7 @@ def run_rollout(model: str, n_uavs: int, requests: int, params: RadioParams,
 
     ch = RadioChannel(params)
     mc = cnn_cost(MODELS[model])
-    devs = split_caps(make_devices(n_uavs, mem_frac=mem_frac), requests)
+    devs = make_devices(n_uavs, mem_frac=mem_frac)
     spec = RolloutSpec(frames=frames, requests_per_frame=requests,
                        jitter_sigma_m=radius / 20.0)
     ro = FleetRollout(ch, devs, mc, spec,

@@ -1,11 +1,14 @@
 """Fig. 3 — average latency vs per-UAV memory cap, for 5-layer LeNet and
 8-layer AlexNet under different request counts (the eq. 11a sweep).
 
-Rebased onto the fleet rollout: each point is ONE device call, and the
-sweep values are per-REQUEST caps (the legacy loop charged the eq. 11a cap
-over the whole request stream elastically; see ``common.split_caps``).
-Below each model's knee the row reports feasibility 0 instead of a
-silently dropped frame; the request count prices period-compute contention.
+Rebased onto the fleet rollout: each point is ONE device call serving the
+full multi-source request stream.  The sweep values are per-PLACEMENT
+memory caps (each capturing UAV's chain-DP placement holds its blocks'
+weights within eq. 11a; the legacy loop charged the cap over the whole
+stream elastically), while the request count prices period-compute
+contention EXACTLY — the frame's aggregate per-UAV MACs against the
+un-split eq. 11b budget, not a 1/RQ fair share.  Below each model's knee
+the row reports feasibility 0 instead of a silently dropped frame.
 """
 from __future__ import annotations
 

@@ -1,15 +1,20 @@
 """Fig. 5 — average latency vs number of requests: LLHR vs the heuristic
 (static path) and random-selection baselines.
 
-The LLHR series rides the fleet rollout (one device call per point, the
-period compute budget split over the request stream); the baselines keep
-the legacy host loop — their per-frame re-positioning (static tour /
-random walk) is exactly the scalar path — dispatched uniformly through the
-``SwarmPlanner`` protocol.  Note the memory models differ at high request
-counts: the legacy ILP charges weights per request (eq. 11a over the
-stream), the rollout path holds a block's weights once per device (see
-``common.split_caps``) — the feasibility column makes the divergence
-visible instead of hiding it in a survivors-only mean.
+The LLHR series rides the fleet rollout (one device call per point) and
+serves the frame's WHOLE request stream in-trace: RQ arrivals drawn over
+the swarm, one chain-DP placement per capturing UAV, and the aggregate
+per-UAV MACs priced exactly against the un-split eq. 11b period budget —
+the 1/RQ ``split_caps`` fair-share approximation is retired from this
+path (it survives only as the legacy comparison in
+``bench_multisource.py``).  The baselines keep the legacy host loop —
+their per-frame re-positioning (static tour / random walk) is exactly the
+scalar path — dispatched uniformly through the ``SwarmPlanner`` protocol.
+Note the memory models still differ at high request counts: the legacy
+ILP charges weights per request (eq. 11a summed over the stream), the
+rollout holds a block's weights once per (source, device) placement — the
+feasibility column makes any divergence visible instead of hiding it in a
+survivors-only mean.
 """
 from __future__ import annotations
 

@@ -7,12 +7,13 @@ Modes:
                      CSV.  The LLHR figure points ride the fleet rollout
                      (one device call per point).
 * ``--bench``      — the perf pipeline: runs ``bench_placement``,
-                     ``bench_scenario_engine``, ``bench_positions`` and
-                     ``bench_rollout`` at full size and writes the
-                     corresponding ``BENCH_*.json`` files (wall-clock,
-                     compile time, speedups vs the NumPy oracle, the PR 1
-                     tracer, the scalar P2 loop, and the legacy per-frame
-                     SwarmSim loop) into ``--out``.
+                     ``bench_scenario_engine``, ``bench_positions``,
+                     ``bench_rollout`` and ``bench_multisource`` at full
+                     size and writes the corresponding ``BENCH_*.json``
+                     files (wall-clock, compile time, speedups vs the
+                     NumPy oracle, the PR 1 tracer, the scalar P2 loop,
+                     the legacy per-frame SwarmSim loop, and the
+                     per-source solve loop) into ``--out``.
 * ``--smoke``      — same pipeline at tiny B/U/L (CI-sized, CPU-friendly)
                      PLUS the rebased fig2-5 scripts in --smoke mode, so
                      the paper-figure path is exercised in CI; agreement,
@@ -47,8 +48,9 @@ def run_figures(smoke: bool = False) -> None:
 
 
 def run_bench(out_dir: str, smoke: bool) -> None:
-    from benchmarks import (bench_placement, bench_positions,
-                            bench_rollout, bench_scenario_engine)
+    from benchmarks import (bench_multisource, bench_placement,
+                            bench_positions, bench_rollout,
+                            bench_scenario_engine)
     os.makedirs(out_dir, exist_ok=True)
     flags = ["--smoke"] if smoke else []
     bench_placement.main(
@@ -60,6 +62,8 @@ def run_bench(out_dir: str, smoke: bool) -> None:
         flags + ["--json", os.path.join(out_dir, "BENCH_positions.json")])
     bench_rollout.main(
         flags + ["--json", os.path.join(out_dir, "BENCH_rollout.json")])
+    bench_multisource.main(
+        flags + ["--json", os.path.join(out_dir, "BENCH_multisource.json")])
     if smoke:
         # the paper-figure path rides the rollout now — exercise it in CI
         run_figures(smoke=True)

@@ -8,8 +8,10 @@ from repro.core.placement import (Device, PlacementProblem,
                                   solve_greedy, solve_random)
 from repro.core.batch import (BatchPositionSolution, BatchPowerSolution,
                               chain_links, links_from_assignment_batched,
-                              pairwise_dist_batched, power_threshold_batched,
-                              rate_matrix_batched, solve_chain_dp_batched,
+                              pairwise_dist_batched, placement_compute_load,
+                              power_threshold_batched, rate_matrix_batched,
+                              shared_cap_feasible, solve_chain_dp_batched,
+                              solve_chain_dp_multisource,
                               solve_positions_batched, solve_power_batched)
 from repro.core.planner import LLHRPlanner, Plan
 from repro.core.power import PowerSolution, solve_power
@@ -42,7 +44,8 @@ __all__ = [
     "StagePlan", "pipeline_efficiency", "plan_pipeline", "stage_devices",
     "BatchPositionSolution", "BatchPowerSolution", "chain_links",
     "links_from_assignment_batched", "pairwise_dist_batched",
-    "power_threshold_batched", "rate_matrix_batched",
-    "solve_chain_dp_batched", "solve_positions_batched",
-    "solve_power_batched",
+    "placement_compute_load", "power_threshold_batched",
+    "rate_matrix_batched", "shared_cap_feasible",
+    "solve_chain_dp_batched", "solve_chain_dp_multisource",
+    "solve_positions_batched", "solve_power_batched",
 ]

@@ -9,6 +9,10 @@ Everything here mirrors an existing scalar implementation elementwise:
   (eq. 5 at the solved powers, zeroed on infeasible links)
 * ``solve_chain_dp_batched``                              <-> ``placement.solve_chain_dp``
   (contiguous-block chain DP, P3 fast path)
+* ``solve_chain_dp_multisource``                          <-> ``placement.place_requests``
+  (the DP vmapped over the frame's source axis; the stream's aggregate
+  per-UAV load is priced exactly by ``placement_compute_load`` +
+  ``shared_cap_feasible`` — eq. 11b over the whole request stream)
 * ``solve_positions_batched``                             <-> ``positions.solve_positions_legacy``
   (P2 projected-gradient descent on eq. 9, separation repair on device)
 
@@ -460,6 +464,85 @@ def _chain_dp_solve(compute: jnp.ndarray, memory: jnp.ndarray,
     return assign, latency
 
 
+def _chain_dp_solve_multi(compute: jnp.ndarray, memory: jnp.ndarray,
+                          act_bits: jnp.ndarray, input_bits: jnp.ndarray,
+                          mem_cap: jnp.ndarray, compute_cap: jnp.ndarray,
+                          throughput: jnp.ndarray, rate: jnp.ndarray,
+                          sources: jnp.ndarray, active: jnp.ndarray,
+                          order: Tuple[int, ...]):
+    """``_chain_dp_solve`` vmapped over a source axis.
+
+    The chain DP depends on the capturing UAV only through the first-block
+    transfer row (``tr_src``), so solving a frame's WHOLE request stream —
+    one placement per capturing UAV — is a ``vmap`` of the scan DP over
+    ``sources`` [B, S] with every other operand broadcast.  Returns
+    ``(assign [B, S, L], latency [B, S])``; the per-request caps inside each
+    DP stay per-placement — pricing the frame's aggregate load against the
+    period budget is ``placement_compute_load`` + the caller's cap check.
+    """
+
+    def one(src):
+        return _chain_dp_solve(compute, memory, act_bits, input_bits,
+                               mem_cap, compute_cap, throughput, rate, src,
+                               active, order)
+
+    return jax.vmap(one, in_axes=1, out_axes=1)(sources)
+
+
+def placement_compute_load(assign: jnp.ndarray, weights: jnp.ndarray,
+                           compute: jnp.ndarray, n_uavs: int) -> jnp.ndarray:
+    """Aggregate per-UAV MACs of a multi-source assignment batch.
+
+    ``assign`` [B, S, L] (device ids, -1 = infeasible), ``weights`` [B, S]
+    arrival counts per source, ``compute`` [L] MACs per layer.  Returns
+    [B, n_uavs]: the eq. (11b) left-hand side summed over the frame's whole
+    request stream — every request of every source charges the MACs of the
+    layers its placement hosts.  Infeasible placements contribute nothing
+    (they are already priced as inf latency by the DP).
+    """
+    onehot = assign[..., None] == jnp.arange(n_uavs)        # [B, S, L, U]
+    macs_s = (compute[None, None, :, None] * onehot).sum(2)  # [B, S, U]
+    return (macs_s * weights[..., None]).sum(1)              # [B, U]
+
+
+def shared_cap_feasible(load: jnp.ndarray, cap: jnp.ndarray) -> jnp.ndarray:
+    """eq. (11b) over the whole request stream: True where no UAV's
+    aggregate load exceeds its period budget.  ``load`` [B, U], ``cap`` [U].
+    The tolerance matches the scalar solvers' absolute 1e-9 slack plus a
+    float32-scale relative term (the aggregate is a float32 sum of
+    MAC-scale numbers; an exact-boundary frame must not flap on rounding).
+    """
+    return (load <= cap[None, :] * (1.0 + 1e-6) + 1e-9).all(-1)
+
+
+def solve_chain_dp_multisource(compute: np.ndarray, memory: np.ndarray,
+                               act_bits: np.ndarray, input_bits: float,
+                               mem_cap: np.ndarray, compute_cap: np.ndarray,
+                               throughput: np.ndarray, rate: np.ndarray,
+                               sources: np.ndarray,
+                               active: Optional[np.ndarray] = None,
+                               device_order: Optional[Sequence[int]] = None
+                               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-facing multi-source mirror of ``solve_chain_dp_batched``.
+
+    ``sources``: [B, S] capturing-UAV index per request slot.  Returns
+    ``(assign [B, S, L], latency [B, S])`` — one chain-DP placement per
+    (scenario, source), solved in ONE device call via the vmapped scan DP.
+    Shared-cap pricing of the aggregate stream is separate
+    (``placement_compute_load`` / ``shared_cap_feasible``) so callers can
+    weight each source by its arrival count.
+    """
+    sources = np.asarray(sources, np.int32)
+    B, S = sources.shape
+    args, order = _as_dp_args(compute, memory, act_bits, input_bits, mem_cap,
+                              compute_cap, throughput, rate,
+                              sources[:, 0], active, device_order)
+    args = args[:-2] + (jnp.asarray(sources, jnp.int32),) + args[-1:]
+    assign, latency = _chain_dp_solve_multi(*args, order)
+    return (np.asarray(assign, dtype=np.int64),
+            np.asarray(latency, dtype=np.float64))
+
+
 @partial(jax.jit, static_argnames=("order",))
 def _chain_dp_tables_unrolled(compute: jnp.ndarray, memory: jnp.ndarray,
                               act_bits: jnp.ndarray, input_bits: jnp.ndarray,
@@ -622,7 +705,8 @@ __all__ = [
     "BatchPowerSolution", "BatchPositionSolution", "pairwise_dist_batched",
     "link_gain_batched", "power_threshold_batched", "solve_power_batched",
     "rate_matrix_batched", "solve_chain_dp_batched",
-    "solve_chain_dp_batched_unrolled", "solve_positions_batched",
-    "links_from_assignment_batched", "chain_links", "position_coeff",
-    "coverage_radius",
+    "solve_chain_dp_batched_unrolled", "solve_chain_dp_multisource",
+    "solve_positions_batched", "links_from_assignment_batched",
+    "placement_compute_load", "shared_cap_feasible", "chain_links",
+    "position_coeff", "coverage_radius",
 ]

@@ -12,24 +12,30 @@ T frames, each frame applying
   3. **battery**    — a UAV whose charge hit zero is excluded from planning
                       exactly like a failed UAV (the contingency semantics
                       the chain DP already implements via ``active``);
-  4. **requests**   — a capturing UAV per frame (remapped to a survivor when
-                      the drawn source is down) with an arrival count that
-                      scales the energy spent serving;
+  4. **requests**   — per-UAV arrival counts (Section II-A: EVERY UAV
+                      generates RQ_i requests, sum = RQ); arrivals drawn on
+                      a dead UAV are captured by the first survivor;
   5. **planning**   — the fused P2 -> P1 -> eq. (5) -> chain-DP -> tightened
-                      powers solve, IN-TRACE (``make_plan_fn`` below is the
-                      same pure function ``ScenarioEngine.plan_batch`` jits);
-  6. **accounting** — per-frame latency, transmit energy (power x airtime),
-                      compute energy (J/MAC), and the battery state carried
-                      into the next frame.
+                      powers solve, IN-TRACE, with one chain-DP placement
+                      PER CAPTURING UAV (the DP vmapped over the source
+                      axis) and the frame's aggregate per-UAV MACs priced
+                      exactly against the eq. (11b) period budget
+                      (``make_plan_fn(multi_source=True)`` below —
+                      ``ScenarioEngine`` jits the same pure functions);
+  6. **accounting** — arrival-weighted frame latency, transmit energy
+                      (power x airtime summed over the source axis),
+                      compute energy (J/MAC x the aggregate MAC load), and
+                      the battery state carried into the next frame.
 
 Everything is batched over B independent fleet trajectories, so a whole
 (B, T) rollout is one jit call with zero host crossings between frames.
-Random draws (jitter, failure/recovery uniforms, sources) are made on the
-host ONCE per rollout and shipped as scan inputs — which is what makes the
-legacy host loop replayable as a per-frame parity oracle
+Random draws (jitter, failure/recovery uniforms, arrival counts) are made on
+the host ONCE per rollout and shipped as scan inputs — which is what makes
+the legacy host loop replayable as a per-frame parity oracle
 (``tests/test_rollout.py``).
 
-Shapes: B = trajectories, T = frames, U = UAVs, L = layers.
+Shapes: B = trajectories, T = frames, U = UAVs (also S, the source axis:
+every UAV is a potential capturing source), L = layers.
 """
 from __future__ import annotations
 
@@ -41,10 +47,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import (_chain_dp_solve, _positions_pgd, chain_links,
-                              coverage_radius, links_from_assignment_batched,
-                              pairwise_dist_batched, position_coeff,
-                              power_threshold_batched, rate_matrix_batched,
+from repro.core.batch import (_chain_dp_solve, _chain_dp_solve_multi,
+                              _positions_pgd, chain_links, coverage_radius,
+                              links_from_assignment_batched,
+                              pairwise_dist_batched, placement_compute_load,
+                              position_coeff, power_threshold_batched,
+                              rate_matrix_batched, shared_cap_feasible,
                               solve_power_batched)
 from repro.core.channel import RadioParams
 
@@ -77,6 +85,11 @@ class RolloutSpec:
 
     * Mobility: each UAV drifts up to ``drift_m_per_frame`` toward its
       waypoint, plus N(0, jitter_sigma_m) per-axis jitter.
+    * Requests: ``requests_per_frame`` is the frame's TOTAL arrival count RQ
+      (Section II-A: sum over UAVs of RQ_i); which UAV captures each request
+      is drawn per frame — uniform over the swarm, or biased by
+      ``arrival_weights`` (one relative capture propensity per UAV, e.g. a
+      camera-carrying scout generating most of the traffic).
     * Failures: i.i.d. Bernoulli per frame — alive UAVs fail with
       ``failure_prob``, failed ones rejoin with ``recovery_prob``.
     * Battery: every UAV starts with ``battery_j`` joules; serving drains
@@ -88,7 +101,8 @@ class RolloutSpec:
 
     frames: int = 32
     frame_s: float = 60.0              # optimization period (Section IV)
-    requests_per_frame: int = 1        # RQ arrivals from the capturing UAV
+    requests_per_frame: int = 1        # RQ: total arrivals per frame
+    arrival_weights: Optional[Tuple[float, ...]] = None  # per-UAV RQ_i bias
     drift_m_per_frame: float = 0.0     # waypoint pull per frame (m)
     jitter_sigma_m: float = 0.0        # mobility jitter std-dev (m)
     waypoint_range_m: float = 0.0      # waypoints drawn in +-range around base
@@ -98,7 +112,16 @@ class RolloutSpec:
     hover_watts: float = 0.0
     compute_j_per_mac: float = 1e-9    # ~1 nJ/MAC, Raspberry-Pi class
 
+    def __post_init__(self):
+        if self.arrival_weights is not None:
+            object.__setattr__(self, "arrival_weights",
+                               tuple(float(w) for w in self.arrival_weights))
+
     def key(self) -> tuple:
+        # arrival_weights is deliberately NOT part of the key: the weights
+        # only bias the HOST-side multinomial draws (FleetRollout.run), so
+        # two specs differing only there produce bit-identical traced
+        # programs and must share one compiled rollout
         return ("rollout-spec", self.frame_s, self.requests_per_frame,
                 self.drift_m_per_frame, self.jitter_sigma_m,
                 self.waypoint_range_m, self.failure_prob, self.recovery_prob,
@@ -113,7 +136,9 @@ class RolloutSpec:
 def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
                  input_bits, mem_cap, compute_cap, throughput,
                  order: Tuple[int, ...],
-                 p2: Optional[PositionSpec] = None):
+                 p2: Optional[PositionSpec] = None,
+                 multi_source: bool = False,
+                 max_sources: Optional[int] = None):
     """The WHOLE planning tick as one pure, trace-safe function:
 
         (P2 positions from the input initializations, when ``p2`` is set)
@@ -127,9 +152,51 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
     ``links_from_assignment_batched``, and reuses the eq. (7) thresholds
     computed for the first P1 pass.
 
-    ``ScenarioEngine`` jits the returned function directly (one call per
-    ``plan_batch``); ``make_rollout_fn`` embeds the SAME function inside the
-    frame scan, so a rollout frame and a batched plan are bit-identical.
+    With ``multi_source=False`` the returned function is
+
+        solve(positions, source [B], active, gain_scale, p2_links)
+        -> (positions, power, rate, assign [B, L], latency [B])
+
+    — one capturing UAV per scenario.  With ``multi_source=True`` it serves
+    a frame's WHOLE request stream (Section II-A: every UAV generates RQ_i
+    requests):
+
+        solve(positions, n_req [B, U], active, gain_scale, p2_links)
+        -> (positions, power, rate, assign [B, U, L], lat_src [B, U],
+            latency [B], load [B, U], cap_ok [B])
+
+    The chain DP is vmapped over the source axis (it differs only in the
+    first-block transfer row), each source weighted by its arrival count:
+    frame ``latency`` is the arrival-weighted per-request mix, the powers
+    are tightened to the UNION of every served source's links, and ``load``
+    is the frame's aggregate per-UAV MACs — priced EXACTLY against the
+    eq. (11b) period budget (``cap_ok``; an over-budget frame reports inf
+    latency).  This replaces the 1/RQ fair-share cap split the benchmarks
+    used to approximate the legacy planner's shared residual caps with.
+
+    Relation to the legacy residual-cap loop (``place_requests``): the
+    stream is priced at each source's LATENCY-OPTIMAL placement.  That
+    agrees with the legacy loop wherever caps do not bind (identical
+    placements, identical latencies) and wherever the stream is jointly
+    unroutable (both infeasible); in between — a contended stream the
+    legacy loop rescues by re-routing LATER requests onto worse devices
+    as capacity fills — this pass is deliberately CONSERVATIVE: it flags
+    the frame infeasible rather than serve a degraded placement the DP
+    never solved.  The parity tests pin both agreeing regimes.
+
+    ``max_sources`` bounds the vmapped source axis: with S = max_sources
+    < U the tick gathers the S LARGEST arrival counts in-trace (a frame
+    with RQ total arrivals has at most RQ distinct sources, so the
+    rollout compiles S = min(U, RQ) DP slots instead of U) and scatters
+    the results back onto the U axis — unrequested sources then report
+    assign -1 / latency inf.  With the default S = U every source is
+    solved whether or not it drew arrivals (the engine's ``plan_batch_
+    multi`` contract: per-source fields cover the whole swarm).
+
+    ``ScenarioEngine`` jits the returned functions directly (one call per
+    ``plan_batch`` / ``plan_batch_multi``); ``make_rollout_fn`` embeds the
+    SAME multi-source function inside the frame scan, so a rollout frame
+    and a batched plan are bit-identical.
     """
     compute = jnp.asarray(compute, jnp.float32)
     memory = jnp.asarray(memory, jnp.float32)
@@ -140,7 +207,7 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
     throughput = jnp.asarray(throughput, jnp.float32)
     U = int(mem_cap.shape[0])
 
-    def solve(positions, source, active, gain_scale, p2_links):
+    def geometry(positions, active, gain_scale, p2_links):
         if p2 is not None:
             positions, _, _, _ = _positions_pgd(
                 positions, p2_links,
@@ -154,6 +221,11 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
                                  gain_scale=gain_scale, threshold_matrix=th)
         rate = rate_matrix_batched(dist, pw.power, params, pw.link_feasible,
                                    gain_scale=gain_scale)
+        return positions, dist, th, rate
+
+    def solve(positions, source, active, gain_scale, p2_links):
+        positions, dist, th, rate = geometry(positions, active, gain_scale,
+                                             p2_links)
         assign, latency = _chain_dp_solve(
             compute, memory, act_bits, input_bits, mem_cap, compute_cap,
             throughput, rate, source, active, order)
@@ -162,7 +234,60 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
                                     threshold_matrix=th).power
         return positions, power, rate, assign, latency
 
-    return solve
+    S = U if max_sources is None else max(1, min(U, int(max_sources)))
+    L = int(np.asarray(compute).shape[0])
+
+    def solve_multi(positions, n_req, active, gain_scale, p2_links):
+        positions, dist, th, rate = geometry(positions, active, gain_scale,
+                                             p2_links)
+        B = positions.shape[0]
+        n_req = jnp.asarray(n_req, jnp.float32)
+        if S < U:
+            # a frame with RQ total arrivals has at most RQ distinct
+            # sources: gather the S largest counts, solve only those slots
+            slot_src = jnp.argsort(-n_req, axis=-1)[:, :S] \
+                .astype(jnp.int32)                          # [B, S]
+        else:
+            slot_src = jnp.broadcast_to(
+                jnp.arange(U, dtype=jnp.int32), (B, U))
+        slot_cnt = jnp.take_along_axis(n_req, slot_src, -1)  # [B, S]
+        assign_s, lat_s = _chain_dp_solve_multi(
+            compute, memory, act_bits, input_bits, mem_cap, compute_cap,
+            throughput, rate, slot_src, active, order)      # [B,S,L],[B,S]
+        requested = slot_cnt > 0
+        served = requested & jnp.isfinite(lat_s)
+        # arrival-weighted per-request latency; a requested source the DP
+        # could not place makes the whole frame infeasible (inf), exactly
+        # like an INFEASIBLE placement in the legacy request loop
+        weighted = jnp.where(requested, slot_cnt * lat_s, 0.0).sum(-1)
+        latency = weighted / jnp.maximum(n_req.sum(-1), 1.0)
+        # exact shared-cap pricing: the aggregate per-UAV MACs of the whole
+        # stream against the eq. (11b) period budget
+        load = placement_compute_load(
+            assign_s, jnp.where(requested, slot_cnt, 0.0), compute, U)
+        cap_ok = shared_cap_feasible(load, compute_cap)
+        latency = jnp.where(cap_ok, latency, jnp.inf)
+        # tighten P1 to the union of the links every SERVED source uses
+        used = jax.vmap(
+            lambda a, s: links_from_assignment_batched(a, s, U),
+            in_axes=1, out_axes=1)(assign_s, slot_src)      # [B,S,U,U]
+        used = (used & served[:, :, None, None]).any(1)
+        power = solve_power_batched(dist, params, links=used, active=active,
+                                    threshold_matrix=th).power
+        if S < U:
+            # scatter the solved slots back onto the U source axis;
+            # unrequested sources report assign -1 / latency inf
+            rows = jnp.arange(B)[:, None]
+            lat_src = jnp.full((B, U), jnp.inf).at[rows, slot_src].set(
+                jnp.where(requested, lat_s, jnp.inf))
+            assign = jnp.full((B, U, L), -1, jnp.int32) \
+                .at[rows, slot_src].set(
+                    jnp.where(requested[..., None], assign_s, -1))
+        else:
+            lat_src, assign = lat_s, assign_s
+        return positions, power, rate, assign, lat_src, latency, load, cap_ok
+
+    return solve_multi if multi_source else solve
 
 
 def _frame_energy(assign, source, power, rate, compute, act_bits,
@@ -195,6 +320,27 @@ def _frame_energy(assign, source, power, rate, compute, act_bits,
     return macs, tx_time
 
 
+def _frame_tx_time_multi(assign, n_req, rate, act_bits, input_bits):
+    """Arrival-weighted per-UAV time-on-air of a frame's WHOLE request
+    stream: ``_frame_energy``'s transmit half vmapped over the source axis
+    (every UAV is its own source) and summed with each source's arrival
+    count.  ``assign`` [B, S=U, L], ``n_req`` [B, U] -> tx_time [B, U].
+    The aggregate MAC half lives in the plan itself
+    (``placement_compute_load``) because it also prices the shared cap.
+    """
+    B, S = n_req.shape
+    sources = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    zero_pw = jnp.zeros((B, S))          # _frame_energy only reads its shape
+
+    def one(a, s):
+        _, tx = _frame_energy(a, s, zero_pw, rate, jnp.zeros_like(act_bits),
+                              act_bits, input_bits)
+        return tx
+
+    tx_s = jax.vmap(one, in_axes=1, out_axes=1)(assign, sources)  # [B,S,U]
+    return (tx_s * n_req[:, :, None]).sum(1)
+
+
 # ---------------------------------------------------------------------------
 # The rollout scan
 # ---------------------------------------------------------------------------
@@ -216,12 +362,14 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
         fail_u    [T, B, U]  failure uniforms  (< failure_prob kills)
         recov_u   [T, B, U]  recovery uniforms (< recovery_prob revives)
         forced    [T, B, U]  bool, True = externally forced dead this frame
-        source    [T, B]     drawn capturing UAV (remapped to a survivor)
-        n_req     [T, B]     request arrivals this frame
+        arrivals  [T, B, U]  drawn request arrivals per capturing UAV
 
     and returns per-frame stacks (leading T): positions, active, charge,
-    latency, total tightened power, feasibility, assignment, the remapped
-    source, and per-UAV transmit/compute energy.
+    arrival-weighted latency, total tightened power (masked to feasible
+    frames), feasibility, the exact shared-cap verdict, the per-source
+    assignment batch [B, U, L], per-source latencies [B, U], the served
+    arrival counts (dead sources' arrivals remapped to the first survivor),
+    and per-UAV transmit/compute energy.
 
     Frame order matters and is fixed: mobility -> failure/recovery ->
     battery gate -> plan -> energy drain.  The charge consumed serving a
@@ -230,11 +378,16 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
     invariants: monotone non-increasing, and dead => excluded from the
     following frames' placements.
     """
+    # a frame's RQ arrivals touch at most RQ distinct sources, so the scan
+    # compiles min(U, RQ) DP slots — cost scales with the actual request
+    # stream, not the swarm size (FleetRollout.run validates arrivals
+    # against this bound host-side)
     solve = make_plan_fn(params=params, compute=compute, memory=memory,
                          act_bits=act_bits, input_bits=input_bits,
                          mem_cap=mem_cap, compute_cap=compute_cap,
-                         throughput=throughput, order=order, p2=p2)
-    compute_j = jnp.asarray(compute, jnp.float32)
+                         throughput=throughput, order=order, p2=p2,
+                         multi_source=True,
+                         max_sources=spec.requests_per_frame)
     act_j = jnp.asarray(act_bits, jnp.float32)
     input_j = jnp.float32(input_bits)
     U = int(np.asarray(mem_cap).shape[0])
@@ -247,13 +400,14 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
     p_recover = jnp.float32(spec.recovery_prob)
 
     def rollout(pos0, charge0, alive0, waypoint, jitter, fail_u, recov_u,
-                forced, source, n_req):
+                forced, arrivals):
         on_trace()
         B = pos0.shape[0]
+        rows = jnp.arange(B)
 
         def frame(carry, xs):
             pos, alive, charge = carry
-            jit_t, fail_t, rec_t, dead_t, src_t, nreq_t = xs
+            jit_t, fail_t, rec_t, dead_t, arr_t = xs
             # 1. mobility: bounded step toward the waypoint, plus jitter
             to_wp = waypoint - pos
             nrm = jnp.linalg.norm(to_wp, axis=-1, keepdims=True)
@@ -270,27 +424,36 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
             # 3. battery gate: drained at the frame boundary => excluded
             powered = charge > 0.0
             active = alive & powered
-            # 4. request source, remapped to a survivor when down
+            # 4. arrivals drawn on a dead UAV are captured by the FIRST
+            # survivor (the legacy delegation maps a dead source to the
+            # lowest-indexed one).  An all-dead fleet keeps the orphaned
+            # counts on (inactive) UAV 0, so the frame prices as infeasible
+            # instead of silently serving nobody.
             first_active = jnp.argmax(active, axis=-1).astype(jnp.int32)
-            src_ok = jnp.take_along_axis(active, src_t[:, None], 1)[:, 0]
-            src = jnp.where(src_ok, src_t, first_active)
-            # 5. the fused planning tick, in-trace
+            n_live = jnp.where(active, arr_t, 0.0)
+            orphaned = (arr_t - n_live).sum(-1)
+            n_eff = n_live.at[rows, first_active].add(orphaned)
+            # 5. the fused multi-source planning tick, in-trace
             p2_links = None if links_const is None else \
                 jnp.broadcast_to(links_const, (B, U, U))
-            pos, power, rate, assign, latency = solve(
-                pos, src, active, None, p2_links)
-            # 6. energy accounting + battery carry
-            macs, tx_time = _frame_energy(assign, src, power, rate,
-                                          compute_j, act_j, input_j)
-            e_cmp = kappa * macs * nreq_t[:, None]
-            e_tx = power * tx_time * nreq_t[:, None]
+            (pos, power, rate, assign, lat_src, latency, load,
+             cap_ok) = solve(pos, n_eff, active, None, p2_links)
+            # 6. energy accounting + battery carry.  ``load`` is already
+            # the arrival-weighted aggregate MACs; an infeasible frame is
+            # not served, so it spends nothing beyond hover.
+            feasible = jnp.isfinite(latency)
+            tx_time = _frame_tx_time_multi(assign, n_eff, rate, act_j,
+                                           input_j)
+            e_cmp = jnp.where(feasible[:, None], kappa * load, 0.0)
+            e_tx = jnp.where(feasible[:, None], power * tx_time, 0.0)
             drain = jnp.where(active, e_cmp + e_tx + hover_e, 0.0)
             charge = jnp.maximum(charge - drain, 0.0)
-            out = (pos, active, charge, latency, power.sum(-1),
-                   jnp.isfinite(latency), assign, src, e_tx, e_cmp)
+            out = (pos, active, charge, latency,
+                   jnp.where(feasible, power.sum(-1), 0.0), feasible,
+                   cap_ok, assign, lat_src, n_eff, e_tx, e_cmp)
             return (pos, alive, charge), out
 
-        xs = (jitter, fail_u, recov_u, forced, source, n_req)
+        xs = (jitter, fail_u, recov_u, forced, arrivals)
         _, outs = jax.lax.scan(frame, (pos0, alive0, charge0), xs)
         return outs
 

@@ -103,12 +103,16 @@ class SwarmSim:
                       the fused chain DP;
     * ``"legacy"``  — force the host loop.
 
-    On the rollout path each frame serves ``requests_per_frame`` requests
-    from ONE capturing UAV (the paper's Section II-A source), per-request
-    latency is reported, and battery/mobility knobs (``jitter_sigma_m``,
-    ``battery_j``, ...) become live scenario axes.  The legacy loop keeps
-    the original semantics: multiple sources per frame sharing residual
-    caps across the request stream.
+    Both backends serve the paper's full Section II-A request stream —
+    every UAV generates requests, ``requests_per_frame`` in total per
+    frame.  The rollout replays the SAME host-drawn source stream as the
+    legacy loop (one chain-DP placement per capturing UAV, vmapped on
+    device) and prices the frame's aggregate per-UAV MACs exactly against
+    the eq. (11b) period budget; the legacy loop consumes shared residual
+    caps request by request.  On the rollout path battery/mobility knobs
+    (``jitter_sigma_m``, ``battery_j``, ...) additionally become live
+    scenario axes, and the reported per-frame latency is the
+    arrival-weighted per-request mix on both paths.
     """
 
     model: ModelCost
@@ -152,23 +156,21 @@ class SwarmSim:
         rollout = FleetRollout(planner.channel, self.devices, self.model,
                                spec, position_spec=p2, seed=self.seed)
         # same RNG protocol as the legacy loop: one source draw per request
-        # per frame; the rollout serves the frame's first draw (Section
-        # II-A's capturing UAV), so requests_per_frame=1 replays the legacy
-        # stream exactly (the parity tests run in that configuration)
+        # per frame — the rollout serves the WHOLE drawn stream (one
+        # placement per capturing UAV, shared caps priced exactly), so any
+        # requests_per_frame replays the legacy stream
         rng = np.random.default_rng(self.seed)
-        sources = np.stack([
-            rng.integers(0, U, size=self.requests_per_frame)[:1]
-            for _ in range(frames)])                       # [T, 1]
+        arrivals = np.stack([
+            np.bincount(rng.integers(0, U, size=self.requests_per_frame),
+                        minlength=U)
+            for _ in range(frames)])[:, None, :]           # [T, 1, U]
         forced = [(self.failure_frame, self.failure_uav)] \
             if 0 <= self.failure_frame < frames else None
         base = hex_init(U, 2.0 * planner.radius, jitter=0.5,
                         seed=planner.seed)
-        trace = rollout.run(base, n_trajectories=1, sources=sources,
+        trace = rollout.run(base, n_trajectories=1, arrivals=arrivals,
                             forced_failures=forced)
-        stats = trace.frame_stats(0)
-        for s in stats:                   # report the full arrival count
-            s.n_requests = self.requests_per_frame
-        return stats
+        return trace.frame_stats(0)
 
     # ------------------------------------------------------------------
     def run_legacy(self, frames: int = 5) -> List[FrameStats]:
@@ -241,4 +243,8 @@ def feasibility_rate(stats: Sequence[FrameStats]) -> float:
 
 
 def average_power(stats: Sequence[FrameStats]) -> float:
-    return float(np.mean([s.power for s in stats]))
+    """Mean tightened transmit power over FEASIBLE frames only (mirroring
+    the latency statistics): an infeasible frame serves nothing, so its
+    powers must not leak into the figure-level average."""
+    vals = [s.power for s in stats if s.feasible]
+    return float(np.mean(vals)) if vals else 0.0

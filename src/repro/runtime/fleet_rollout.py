@@ -3,12 +3,14 @@ rollout scan (``repro.core.rollout``).
 
 A ``FleetRollout`` is a ``ScenarioEngine`` (same constants, same compiled
 fused plan, same ``PlanFnCache`` keys) that ALSO owns a compiled (B, T)
-rollout: mobility, failure/recovery, battery drain, request arrival and the
-fused P1->P2->P3 solve for every frame of every trajectory, in ONE jit call
-with zero host crossings between frames.  ``SwarmSim`` is its B = 1 wrapper;
-``benchmarks/fig2_*..fig5_*`` call it once per figure point; the
-``PeriodicReplanner`` uses it as a lookahead that prices a plan over the
-modelled dynamics, not just at the nominal state.
+rollout: mobility, failure/recovery, battery drain, the frame's WHOLE
+multi-source request stream (Section II-A: every UAV generates RQ_i
+requests) and the fused P1->P2->P3 solve for every frame of every
+trajectory, in ONE jit call with zero host crossings between frames.
+``SwarmSim`` is its B = 1 wrapper; ``benchmarks/fig2_*..fig5_*`` call it
+once per figure point; the ``PeriodicReplanner`` uses it as a lookahead
+that prices a plan over the modelled dynamics, not just at the nominal
+state.
 
 All randomness is drawn host-side per ``run()`` (one ``numpy`` generator,
 shipped to the scan as inputs), which keeps the legacy host loop replayable
@@ -31,22 +33,30 @@ from repro.runtime.scenario_engine import ScenarioEngine
 class RolloutTrace:
     """The full (B, T) rollout record, trajectory-major.
 
-    ``latency`` is PER-REQUEST end-to-end latency (inf = infeasible frame),
-    ``total_power`` the tightened used-links transmit power (W), ``charge``
-    the battery state AFTER each frame's drain, and ``active`` the UAVs the
-    frame actually planned over (alive AND powered)."""
+    ``latency`` is the ARRIVAL-WEIGHTED per-request latency of each frame's
+    whole request stream (inf = infeasible frame: a requested source the DP
+    could not place, or an aggregate load over the eq. 11b period budget —
+    see ``cap_feasible``).  ``source_latency`` holds every capturing UAV's
+    own per-request latency and ``assign`` its placement, whether or not it
+    drew arrivals that frame.  ``total_power`` is the tightened used-links
+    transmit power (W), masked to 0 on infeasible frames (an unserved frame
+    transmits nothing); ``charge`` the battery state AFTER each frame's
+    drain; ``active`` the UAVs the frame actually planned over (alive AND
+    powered); ``n_requests`` the served arrival counts (arrivals drawn on a
+    dead UAV are captured by the first survivor)."""
 
-    latency: np.ndarray        # [B, T]
-    total_power: np.ndarray    # [B, T]
-    feasible: np.ndarray       # [B, T] bool
-    assign: np.ndarray         # [B, T, L] device ids (-1 = infeasible)
-    positions: np.ndarray      # [B, T, U, 2] planned (post-P2) positions
-    active: np.ndarray         # [B, T, U] bool
-    charge: np.ndarray         # [B, T, U] J
-    source: np.ndarray         # [B, T] remapped capturing UAV
-    n_requests: np.ndarray     # [B, T]
-    energy_tx: np.ndarray      # [B, T, U] J
-    energy_cmp: np.ndarray     # [B, T, U] J
+    latency: np.ndarray         # [B, T] arrival-weighted (inf = infeasible)
+    total_power: np.ndarray     # [B, T] 0 on infeasible frames
+    feasible: np.ndarray        # [B, T] bool
+    cap_feasible: np.ndarray    # [B, T] bool — eq. 11b aggregate-load check
+    source_latency: np.ndarray  # [B, T, U] per-request latency per source
+    assign: np.ndarray          # [B, T, U, L] device ids (-1 = infeasible)
+    positions: np.ndarray       # [B, T, U, 2] planned (post-P2) positions
+    active: np.ndarray          # [B, T, U] bool
+    charge: np.ndarray          # [B, T, U] J
+    n_requests: np.ndarray      # [B, T, U] served arrivals per source
+    energy_tx: np.ndarray       # [B, T, U] J
+    energy_cmp: np.ndarray      # [B, T, U] J
 
     @property
     def n_trajectories(self) -> int:
@@ -63,16 +73,19 @@ class RolloutTrace:
 
     @property
     def mean_latency(self) -> float:
-        """Mean per-request latency over FEASIBLE frames (inf when none) —
-        always read next to ``feasibility_rate``: the mean alone can hide
-        an arbitrarily broken fleet."""
+        """Mean arrival-weighted latency over FEASIBLE frames (inf when
+        none) — always read next to ``feasibility_rate``: the mean alone
+        can hide an arbitrarily broken fleet."""
         vals = self.latency[self.feasible]
         return float(vals.mean()) if vals.size else float("inf")
 
     @property
     def mean_power(self) -> float:
-        return float(self.total_power.mean()) if self.total_power.size \
-            else 0.0
+        """Mean tightened transmit power over FEASIBLE frames only
+        (mirroring ``mean_latency``): an infeasible frame serves nothing,
+        so its powers must not dilute or inflate the statistic."""
+        vals = self.total_power[self.feasible]
+        return float(vals.mean()) if vals.size else 0.0
 
     def latency_percentile(self, q: float) -> float:
         """Ensemble percentile over ALL (trajectory, frame) points,
@@ -82,6 +95,8 @@ class RolloutTrace:
     def frame_stats(self, trajectory: int = 0) -> List["FrameStats"]:
         """One trajectory as the legacy ``SwarmSim`` per-frame records.
 
+        ``n_requests`` is the frame's total served arrival count straight
+        from the trace (per-source counts live in ``self.n_requests``);
         ``replanned`` marks frames where the planned-over UAV set shrank
         (failure or battery death) — the moment the contingency semantics
         absorbed a loss."""
@@ -99,7 +114,7 @@ class RolloutTrace:
                 power=float(self.total_power[b, t]),
                 breakdown={"e_tx": float(self.energy_tx[b, t].sum()),
                            "e_compute": float(self.energy_cmp[b, t].sum())},
-                n_requests=int(self.n_requests[b, t]),
+                n_requests=int(self.n_requests[b, t].sum()),
                 feasible=bool(self.feasible[b, t]), replanned=shrank))
         return out
 
@@ -134,20 +149,39 @@ class FleetRollout(ScenarioEngine):
             order=self.order, spec=spec, p2=self.position_spec))
 
     # ------------------------------------------------------------------
+    def _arrival_probs(self) -> np.ndarray:
+        U = len(self.devices)
+        if self.spec.arrival_weights is None:
+            return np.full(U, 1.0 / U)
+        w = np.asarray(self.spec.arrival_weights, np.float64)
+        if w.shape != (U,) or (w < 0).any() or w.sum() <= 0:
+            raise ValueError(f"arrival_weights must be {U} nonnegative "
+                             "values with a positive sum")
+        return w / w.sum()
+
+    # ------------------------------------------------------------------
     def run(self, base_positions: np.ndarray, n_trajectories: int = 1,
             frames: Optional[int] = None,
             charge0: Optional[np.ndarray] = None,
             alive0: Optional[np.ndarray] = None,
             forced_failures: Optional[Sequence[Tuple[int, int]]] = None,
             sources: Optional[np.ndarray] = None,
+            arrivals: Optional[np.ndarray] = None,
             waypoints: Optional[np.ndarray] = None) -> RolloutTrace:
         """Roll B trajectories forward T frames in one device call.
 
         ``base_positions``: [U, 2] (tiled over trajectories) or [B, U, 2].
         ``forced_failures``: (frame, uav) pairs — the UAV is dead from that
         frame on in EVERY trajectory (the simulator's injection hook).
-        ``sources``: optional [T, B] capturing-UAV draws (default: uniform
-        over the swarm, remapped in-trace to a survivor).
+        ``arrivals``: optional [T, B, U] per-UAV request counts (the full
+        Section II-A stream; default: ``requests_per_frame`` total arrivals
+        drawn multinomially over the swarm with ``spec.arrival_weights``).
+        ``sources``: optional [T, B] single capturing-UAV draws — sugar for
+        an ``arrivals`` tensor with all ``requests_per_frame`` counts on
+        the drawn UAV (the pre-multi-source API; mutually exclusive with
+        ``arrivals``).  Both are validated host-side: indices outside
+        [0, U) or negative counts raise instead of being silently clipped
+        by the device gather.
         ``waypoints``: optional [B, U, 2] drift targets (default: drawn in
         ``spec.waypoint_range_m`` around each UAV's start, or the start
         itself when the range is 0 — pure jitter mobility).
@@ -177,10 +211,36 @@ class FleetRollout(ScenarioEngine):
         for f, u in (forced_failures or ()):
             if 0 <= f < T:
                 forced[f:, :, u] = True
-        if sources is None:
-            sources = rng.integers(0, U, size=(T, B))
-        sources = np.asarray(sources, np.int32).reshape(T, B)
-        n_req = np.full((T, B), self.spec.requests_per_frame, np.float32)
+        if sources is not None and arrivals is not None:
+            raise ValueError("pass either sources or arrivals, not both")
+        if sources is not None:
+            sources = np.asarray(sources, np.int64).reshape(T, B)
+            if (sources < 0).any() or (sources >= U).any():
+                raise ValueError(
+                    f"sources must index UAVs in [0, {U}); got values in "
+                    f"[{sources.min()}, {sources.max()}]")
+            arrivals = np.zeros((T, B, U), np.float32)
+            np.put_along_axis(arrivals, sources[..., None],
+                              float(self.spec.requests_per_frame), axis=2)
+        elif arrivals is None:
+            arrivals = rng.multinomial(
+                self.spec.requests_per_frame, self._arrival_probs(),
+                size=(T, B)).astype(np.float32)
+        else:
+            arrivals = np.asarray(arrivals, np.float32)
+            if arrivals.shape != (T, B, U):
+                raise ValueError(f"arrivals must be [T={T}, B={B}, U={U}]; "
+                                 f"got {arrivals.shape}")
+            if (arrivals < 0).any():
+                raise ValueError("arrivals must be nonnegative counts")
+            slots = max(1, min(U, self.spec.requests_per_frame))
+            widest = int(np.count_nonzero(arrivals, axis=-1).max())
+            if widest > slots:
+                raise ValueError(
+                    f"arrivals touch up to {widest} distinct sources in a "
+                    f"frame but the compiled rollout solves min(U, "
+                    f"requests_per_frame) = {slots} source slots; raise "
+                    f"RolloutSpec.requests_per_frame to at least {widest}")
         if charge0 is None:
             charge0 = np.full((B, U), self.spec.battery_j, np.float32)
         else:
@@ -189,12 +249,12 @@ class FleetRollout(ScenarioEngine):
         if alive0 is None:
             alive0 = np.ones((B, U), dtype=bool)
 
-        (pos, active, charge, latency, power, feasible, assign, src,
-         e_tx, e_cmp) = self._rollout(
+        (pos, active, charge, latency, power, feasible, cap_ok, assign,
+         lat_src, n_eff, e_tx, e_cmp) = self._rollout(
             jnp.asarray(pos0), jnp.asarray(charge0), jnp.asarray(alive0),
             jnp.asarray(waypoints, jnp.float32), jnp.asarray(jitter),
             jnp.asarray(fail_u), jnp.asarray(recov_u), jnp.asarray(forced),
-            jnp.asarray(sources), jnp.asarray(n_req))
+            jnp.asarray(arrivals))
 
         def tm(x, dtype=np.float64):        # [T, B, ...] -> [B, T, ...]
             arr = np.asarray(x)
@@ -202,9 +262,10 @@ class FleetRollout(ScenarioEngine):
 
         return RolloutTrace(
             latency=tm(latency), total_power=tm(power),
-            feasible=tm(feasible, bool), assign=tm(assign, np.int64),
+            feasible=tm(feasible, bool), cap_feasible=tm(cap_ok, bool),
+            source_latency=tm(lat_src), assign=tm(assign, np.int64),
             positions=tm(pos), active=tm(active, bool), charge=tm(charge),
-            source=tm(src, np.int64), n_requests=tm(n_req, np.int64),
+            n_requests=tm(n_eff, np.int64),
             energy_tx=tm(e_tx), energy_cmp=tm(e_cmp))
 
 

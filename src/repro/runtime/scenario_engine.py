@@ -219,17 +219,22 @@ PLAN_FN_CACHE = PlanFnCache()
 def _build_solve_fn(on_trace, *, params: RadioParams, compute, memory,
                     act_bits, input_bits, mem_cap, compute_cap, throughput,
                     order: Tuple[int, ...],
-                    p2: Optional[PositionSpec] = None):
+                    p2: Optional[PositionSpec] = None,
+                    multi_source: bool = False):
     """One fused jit — the WHOLE planning tick on device.
 
     The actual pipeline lives in ``repro.core.rollout.make_plan_fn`` (it is
     the same pure function the fleet rollout embeds inside its frame scan);
     this wrapper only adds the retrace counter and the jit boundary the
-    engine's ``plan_batch`` calls through."""
+    engine's ``plan_batch`` / ``plan_batch_multi`` calls through.  The
+    multi-source variant is a SEPARATE compiled callable (its source input
+    is [B, U] arrival counts, not a [B] index), so it lives under its own
+    ``PlanFnCache`` key."""
     solve = make_plan_fn(params=params, compute=compute, memory=memory,
                          act_bits=act_bits, input_bits=input_bits,
                          mem_cap=mem_cap, compute_cap=compute_cap,
-                         throughput=throughput, order=order, p2=p2)
+                         throughput=throughput, order=order, p2=p2,
+                         multi_source=multi_source)
 
     def traced(positions, source, active, gain_scale, p2_links):
         on_trace()
@@ -286,6 +291,42 @@ class BatchPlan:
         return percentile_with_inf(self.latency, q)
 
 
+@dataclass
+class MultiSourcePlan:
+    """Plans for a batch of scenarios serving a WHOLE request stream each
+    (Section II-A: every UAV generates RQ_i requests, sum = RQ).
+
+    One chain-DP placement per (scenario, capturing UAV) — the DP vmapped
+    over the source axis — with the frame's aggregate per-UAV MACs priced
+    EXACTLY against the eq. (11b) period budget.  ``latency`` is the
+    arrival-weighted per-request mix (inf when a requested source cannot be
+    placed OR the aggregate load exceeds the budget); ``power`` is the P1
+    optimum tightened to the union of every served source's links."""
+
+    scenarios: ScenarioBatch
+    n_requests: np.ndarray      # [B, U] arrival counts the plan served
+    power: np.ndarray           # [B, U] transmit powers on used links (W)
+    rate: np.ndarray            # [B, U, U] rho at the sizing powers (bits/s)
+    assign: np.ndarray          # [B, U, L] device ids per source (-1 = inf.)
+    source_latency: np.ndarray  # [B, U] per-request latency per source
+    latency: np.ndarray         # [B] arrival-weighted mix (s; inf = inf.)
+    load: np.ndarray            # [B, U] aggregate per-UAV MACs (eq. 11b lhs)
+    cap_feasible: np.ndarray    # [B] bool — aggregate load within budget
+    total_power: np.ndarray     # [B]
+    positions: Optional[np.ndarray] = None   # [B, U, 2]
+
+    @property
+    def feasible(self) -> np.ndarray:
+        return np.isfinite(self.latency)
+
+    @property
+    def n_feasible(self) -> int:
+        return int(self.feasible.sum())
+
+    def latency_percentile(self, q: float) -> float:
+        return percentile_with_inf(self.latency, q)
+
+
 class ScenarioEngine:
     """Vectorized LLHR fast path: (P2) + batched P1 + eq. (5) + chain-DP
     placement + used-links power tightening.
@@ -325,13 +366,23 @@ class ScenarioEngine:
         self.plan_cache = plan_cache if plan_cache is not None \
             else PLAN_FN_CACHE
         solve_key = self._cache_key()
-        self._cache_keys_used = (solve_key,)
-        self._solve = self.plan_cache.get(solve_key, partial(
+        multi_key = ("solve-multi",) + solve_key[1:]
+        self._cache_keys_used = (solve_key, multi_key)
+        builder = partial(
             _build_solve_fn, params=self.params, compute=self.compute,
             memory=self.memory, act_bits=self.act_bits,
             input_bits=self.input_bits, mem_cap=self.mem_cap,
             compute_cap=self.compute_cap, throughput=self.throughput,
-            order=self.order, p2=self.position_spec))
+            order=self.order, p2=self.position_spec)
+        self._solve = self.plan_cache.get(solve_key, builder)
+        # the multi-source plan is its own compiled callable under its own
+        # key, resolved LAZILY on the first plan_batch_multi call so an
+        # engine that only ever plans single-source pays no extra cache
+        # entry; the key is registered up front so the replanner's retrace
+        # accounting sees it (0 traces until used)
+        self._multi_key = multi_key
+        self._builder = builder
+        self._solve_multi = None
 
     def _cache_key(self) -> tuple:
         """Static signature of the compiled plan: (U, L, S=|order|, dtype)
@@ -357,6 +408,23 @@ class ScenarioEngine:
         return self.plan_cache.info()
 
     # ------------------------------------------------------------------
+    def _p2_links(self, B_: int, U: int,
+                  p2_links: Optional[np.ndarray]):
+        """The [B, U, U] transfer topology the fused P2 stage optimizes
+        positions for (None on engines without a ``PositionSpec``)."""
+        if self.position_spec is None:
+            if p2_links is not None:
+                raise ValueError("p2_links given but this engine has no "
+                                 "PositionSpec; build it with "
+                                 "position_spec=")
+            return None
+        links = chain_links(U, self.order) if p2_links is None else \
+            np.asarray(p2_links, dtype=bool)
+        if links.ndim == 2:
+            links = np.broadcast_to(links, (B_, U, U))
+        return jnp.asarray(links)
+
+    # ------------------------------------------------------------------
     def plan_batch(self, scenarios: ScenarioBatch,
                    p2_links: Optional[np.ndarray] = None) -> BatchPlan:
         """Solve (P2 +) P1 + P3 for every scenario in one fused device call.
@@ -371,16 +439,7 @@ class ScenarioEngine:
         active = scenarios.active if scenarios.active is not None else \
             np.ones((B_, U), dtype=bool)
         gain = scenarios.gain_scale
-        links_j = None
-        if self.position_spec is not None:
-            links = chain_links(U, self.order) if p2_links is None else \
-                np.asarray(p2_links, dtype=bool)
-            if links.ndim == 2:
-                links = np.broadcast_to(links, (B_, U, U))
-            links_j = jnp.asarray(links)
-        elif p2_links is not None:
-            raise ValueError("p2_links given but this engine has no "
-                             "PositionSpec; build it with position_spec=")
+        links_j = self._p2_links(B_, U, p2_links)
         positions, power, rate, assign_j, latency_j = self._solve(
             jnp.asarray(scenarios.positions, jnp.float32),
             jnp.asarray(scenarios.source, jnp.int32), jnp.asarray(active),
@@ -393,6 +452,47 @@ class ScenarioEngine:
                          latency=np.asarray(latency_j, dtype=np.float64),
                          total_power=power.sum(-1),
                          positions=np.asarray(positions, np.float64))
+
+    def plan_batch_multi(self, scenarios: ScenarioBatch,
+                         n_requests: np.ndarray,
+                         p2_links: Optional[np.ndarray] = None
+                         ) -> MultiSourcePlan:
+        """Serve each scenario's WHOLE request stream in one fused call.
+
+        ``n_requests``: [U] (tiled over scenarios) or [B, U] arrival counts
+        per capturing UAV (Section II-A's RQ_i; ``scenarios.source`` is
+        ignored — every UAV with a positive count is a source).  One
+        chain-DP placement per (scenario, source) plus the exact shared-cap
+        pass; see ``MultiSourcePlan``."""
+        B_, U = scenarios.n_scenarios, scenarios.n_uavs
+        n_req = np.asarray(n_requests, np.float32)
+        n_req = np.broadcast_to(n_req, (B_, U)).copy()
+        if (n_req < 0).any():
+            raise ValueError("n_requests must be nonnegative counts")
+        active = scenarios.active if scenarios.active is not None else \
+            np.ones((B_, U), dtype=bool)
+        gain = scenarios.gain_scale
+        links_j = self._p2_links(B_, U, p2_links)
+        if self._solve_multi is None:
+            self._solve_multi = self.plan_cache.get(
+                self._multi_key, partial(self._builder, multi_source=True))
+        (positions, power, rate, assign_j, lat_src, latency_j, load,
+         cap_ok) = self._solve_multi(
+            jnp.asarray(scenarios.positions, jnp.float32),
+            jnp.asarray(n_req), jnp.asarray(active),
+            None if gain is None else jnp.asarray(gain, jnp.float32),
+            links_j)
+        power = np.asarray(power, np.float64)
+        return MultiSourcePlan(
+            scenarios=scenarios, n_requests=n_req.astype(np.int64),
+            power=power, rate=np.asarray(rate, np.float64),
+            assign=np.asarray(assign_j, dtype=np.int64),
+            source_latency=np.asarray(lat_src, np.float64),
+            latency=np.asarray(latency_j, dtype=np.float64),
+            load=np.asarray(load, np.float64),
+            cap_feasible=np.asarray(cap_ok, bool),
+            total_power=power.sum(-1),
+            positions=np.asarray(positions, np.float64))
 
     def plan_positions(self, positions: np.ndarray,
                        source: int = 0) -> BatchPlan:
@@ -509,7 +609,7 @@ class ContingencyTable:
 
 
 __all__ = [
-    "ScenarioBatch", "ScenarioGenerator", "BatchPlan", "ScenarioEngine",
-    "ContingencyPlan", "ContingencyTable", "PlanFnCache", "PLAN_FN_CACHE",
-    "PositionSpec",
+    "ScenarioBatch", "ScenarioGenerator", "BatchPlan", "MultiSourcePlan",
+    "ScenarioEngine", "ContingencyPlan", "ContingencyTable", "PlanFnCache",
+    "PLAN_FN_CACHE", "PositionSpec",
 ]

@@ -188,6 +188,65 @@ class TestBatchedChainDP:
 
 
 # ---------------------------------------------------------------------------
+# Multi-source DP (vmapped over the source axis) + exact shared-cap pricing
+# ---------------------------------------------------------------------------
+
+
+class TestMultiSourceChainDP:
+    def test_matches_per_source_batched_solve(self):
+        """The vmapped multi-source solve is exactly S single-source solves:
+        slicing the [B, S, L] assignment batch at source s reproduces the
+        [B, L] batched solve with that source column."""
+        from repro.core import solve_chain_dp_multisource
+        n_scenarios, n_uavs, S = 8, 5, 4
+        _, dist, rng = random_batch(n_scenarios, n_uavs, seed=3)
+        mc, compute, memory, act = lenet_arrays()
+        devs = make_devices(n_uavs)
+        caps = (np.array([d.mem_cap for d in devs]),
+                np.array([d.compute_cap for d in devs]),
+                np.array([d.throughput for d in devs]))
+        sol_b = solve_power_batched(dist, PARAMS)
+        rate = np.asarray(rate_matrix_batched(dist, sol_b.power, PARAMS,
+                                              sol_b.link_feasible))
+        srcs = rng.integers(0, n_uavs, (n_scenarios, S))
+        assign_m, lat_m = solve_chain_dp_multisource(
+            compute, memory, act, mc.input_bits, *caps, rate, srcs)
+        assert assign_m.shape == (n_scenarios, S, len(compute))
+        assert lat_m.shape == (n_scenarios, S)
+        for s in range(S):
+            assign_1, lat_1 = solve_chain_dp_batched(
+                compute, memory, act, mc.input_bits, *caps, rate,
+                srcs[:, s])
+            np.testing.assert_array_equal(assign_m[:, s], assign_1)
+            np.testing.assert_allclose(lat_m[:, s], lat_1, rtol=RTOL)
+
+    def test_compute_load_and_cap_check(self):
+        """``placement_compute_load`` charges every request of every source
+        the MACs its placement hosts (eq. 11b lhs over the stream), and the
+        cap check flags exactly the scenarios whose aggregate exceeds the
+        period budget."""
+        import jax.numpy as jnp
+
+        from repro.core import placement_compute_load, shared_cap_feasible
+        compute = np.array([10.0, 20.0, 30.0])
+        #                 layer:  0     1     2
+        assign = np.array([[[0, 0, 1],      # source 0: u0 30, u1 30
+                            [2, 2, 2]],     # source 1: u2 60
+                           [[-1, -1, -1],   # infeasible: no load
+                            [1, 1, 1]]])
+        weights = np.array([[2.0, 1.0],
+                            [1.0, 3.0]])
+        load = np.asarray(placement_compute_load(
+            jnp.asarray(assign), jnp.asarray(weights),
+            jnp.asarray(compute), 3))
+        np.testing.assert_allclose(load, [[60.0, 60.0, 60.0],
+                                          [0.0, 180.0, 0.0]])
+        ok = np.asarray(shared_cap_feasible(
+            jnp.asarray(load), jnp.asarray([60.0, 100.0, 60.0])))
+        np.testing.assert_array_equal(ok, [True, False])
+
+
+# ---------------------------------------------------------------------------
 # Scenario generator + engine + runtime wiring
 # ---------------------------------------------------------------------------
 

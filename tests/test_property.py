@@ -266,7 +266,7 @@ class TestRolloutBatteryProperties:
                 assert not trace.active[b, t][dead].any()
                 for u in np.flatnonzero(dead):
                     assert (trace.assign[b, t] != u).all()
-                    assert trace.source[b, t] != u or not np.isfinite(
+                    assert trace.n_requests[b, t, u] == 0 or not np.isfinite(
                         trace.latency[b, t])
 
     @given(st.floats(0.05, 10.0), st.integers(0, 2 ** 31))
@@ -278,6 +278,30 @@ class TestRolloutBatteryProperties:
         # an inactive UAV spends nothing
         inactive = ~trace.active
         assert np.allclose(trace.energy_cmp[inactive], 0.0)
+
+    @given(st.floats(0.05, 10.0), st.integers(0, 2 ** 31))
+    @settings(max_examples=10, deadline=None)
+    def test_shared_cap_never_exceeded_on_feasible_frames(self, scale,
+                                                          seed):
+        """Exact eq. (11b) pricing of the multi-source stream: on every
+        FEASIBLE frame the aggregate per-UAV MACs — every source's
+        placement weighted by its served arrival count — stay within the
+        period compute budget; an over-budget frame must carry the
+        cap-infeasible flag instead."""
+        from repro.configs.lenet import LENET
+        from repro.core import cnn_cost, make_devices
+        trace, _ = self._trace(scale, seed)
+        compute = np.array([l.flops for l in cnn_cost(LENET).layers])
+        caps = np.array([d.compute_cap for d in make_devices(self.U)])
+        onehot = trace.assign[..., None] == np.arange(self.U)  # [B,T,S,L,U]
+        load = (onehot * compute[None, None, None, :, None]).sum(3)
+        load = (load * trace.n_requests[..., None]).sum(2)     # [B,T,U]
+        feas = trace.feasible
+        assert (load[feas] <= caps[None, :] * (1 + 1e-6) + 1e-9).all()
+        assert trace.cap_feasible[feas].all()
+        # over-budget frames (if any were drawn) are flagged infeasible
+        over = (load > caps[None, :] * (1 + 1e-6) + 1e-9).any(-1)
+        assert not trace.feasible[over].any()
 
 
 class TestCheckpointProperties:
