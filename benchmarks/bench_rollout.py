@@ -1,7 +1,7 @@
 """Benchmark: the device-side fleet rollout vs the legacy per-frame
-``SwarmSim`` host loop.
+``SwarmSim`` host loop, plus the mesh-sharded trajectory axis.
 
-Two sections, one JSON (``BENCH_rollout.json``):
+Three sections, one JSON (``BENCH_rollout.json``):
 
 * ``rollout`` — a (B, T, U) fleet rollout (mobility jitter + fused
   P2 -> P1 -> P3 per frame, battery accounting on) in ONE jit call, against
@@ -17,15 +17,24 @@ Two sections, one JSON (``BENCH_rollout.json``):
 * ``parity`` — B = 1, frozen dynamics: every frame of the rollout must
   match the legacy oracle's latency/power/feasibility (also asserted by
   ``tests/test_rollout.py``); the JSON records the max relative error.
+* ``devices_sweep`` — the SAME rollout with the trajectory axis sharded
+  over a 1-D mesh (``FleetRollout.run(devices=n)``) at each requested
+  device count: throughput, retraces-after-first (must stay 0 per mesh),
+  and the max deviation of every ``RolloutTrace`` aggregate statistic
+  from the single-device reference (asserted <= 1e-6 — the shard-
+  invariance contract).  On CPU, counts > 1 need
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``; unavailable
+  counts are recorded as skipped, never silently dropped.
 
 All timed regions end with ``jax.block_until_ready`` (async dispatch must
 not stop the clock early).  Zero retraces across repeated rollouts is
 asserted in both modes.
 
 Usage:
+    [XLA_FLAGS=--xla_force_host_platform_device_count=8]
     PYTHONPATH=src python benchmarks/bench_rollout.py
-        [--batch 256] [--frames 32] [--uavs 8] [--smoke]
-        [--json BENCH_rollout.json]
+        [--batch 256] [--frames 32] [--uavs 8] [--devices 1,2,8]
+        [--smoke] [--json BENCH_rollout.json]
 """
 from __future__ import annotations
 
@@ -131,6 +140,80 @@ def bench_rollout(batch: int, frames: int, uavs: int, steps: int,
     }
 
 
+def bench_devices(batch: int, frames: int, uavs: int, steps: int,
+                  repeats: int, counts) -> Dict:
+    """Shard the trajectory axis over n devices; assert stats invariance.
+
+    Every count runs the SAME host-drawn streams (fresh ``FleetRollout``
+    per count, same seed), so any statistic deviation from the n = 1
+    reference is the sharding's fault, not the RNG's.  A ragged run
+    (B not divisible by the largest count) exercises the padding mask.
+    """
+    mc = cnn_cost(LENET)
+    devs = make_devices(uavs)
+    spec = RolloutSpec(frames=frames, requests_per_frame=2,
+                       jitter_sigma_m=2.0, battery_j=5e3)
+    pspec = PositionSpec(steps=steps, repair_iters=25)
+    base = hex_init(uavs, 40.0, jitter=0.5, seed=0)
+    avail = jax.local_device_count()
+
+    def stats(trace) -> Dict:
+        return {"feasibility_rate": trace.feasibility_rate,
+                "mean_latency_s": trace.mean_latency,
+                "mean_power_w": trace.mean_power,
+                "p50_latency_s": trace.latency_percentile(50.0),
+                "p95_latency_s": trace.latency_percentile(95.0)}
+
+    def run_count(n: int, b: int):
+        ro = FleetRollout(CH, devs, mc, spec, position_spec=pspec, seed=0)
+        trace = ro.run(base, n_trajectories=b, devices=n)
+        jax.block_until_ready((trace.latency,))
+        traces_first = ro.trace_count
+        best = float("inf")
+        for _ in range(repeats):
+            ro2 = FleetRollout(CH, devs, mc, spec, position_spec=pspec,
+                               seed=0)
+            t0 = time.perf_counter()
+            t = ro2.run(base, n_trajectories=b, devices=n)
+            jax.block_until_ready((t.latency,))
+            best = min(best, time.perf_counter() - t0)
+        return trace, traces_first, ro.trace_count - traces_first, best
+
+    out: Dict = {"available_devices": avail, "batch": batch,
+                 "frames": frames, "uavs": uavs, "counts": {}}
+    ref, _, _, _ = run_count(1, batch)
+    ref_stats = stats(ref)
+    ragged_b = batch - 1 if batch > 1 else batch   # forces the pad mask
+    for n in counts:
+        key = str(n)
+        if n > avail:
+            out["counts"][key] = {
+                "skipped": f"needs {n} devices, {avail} available (set "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           f"count={n})"}
+            continue
+        trace, _, retraces, steady = run_count(n, batch)
+        dev = {k: abs(v - ref_stats[k]) for k, v in stats(trace).items()
+               if np.isfinite(ref_stats[k])}
+        entry = {"steady_s": steady,
+                 "frames_per_s": batch * frames / steady,
+                 "retraces_after_first": retraces,
+                 "max_stat_abs_dev_vs_1dev": max(dev.values()),
+                 **stats(trace)}
+        if n > 1:
+            rt, _, _, _ = run_count(n, ragged_b)
+            entry["ragged"] = {
+                "batch": ragged_b, "padded_to": rt.latency.shape[0],
+                "n_trajectories": rt.n_trajectories,
+                "feasibility_rate": rt.feasibility_rate}
+            assert rt.n_trajectories == ragged_b, "padding mask leaked"
+        assert retraces == 0, f"{n}-device rollout retraced"
+        assert entry["max_stat_abs_dev_vs_1dev"] <= 1e-6, \
+            f"{n}-device stats diverged from the single-device reference"
+        out["counts"][key] = entry
+    return out
+
+
 def bench_parity(frames: int, uavs: int) -> Dict:
     """B = 1, frozen dynamics: per-frame parity vs the legacy oracle."""
     mc = cnn_cost(LENET)
@@ -161,13 +244,17 @@ def bench_parity(frames: int, uavs: int) -> Dict:
 
 def run(batch: int = 256, frames: int = 32, uavs: int = 8, steps: int = 30,
         repeats: int = 5, sample_frames: int = 4,
-        smoke: bool = False) -> Dict:
+        smoke: bool = False, device_counts=None) -> Dict:
+    if device_counts is None:
+        device_counts = [n for n in (1, 2, 4, 8)
+                         if n <= jax.local_device_count()]
     result: Dict = {
         "benchmark": "fleet_rollout",
         "backend": jax.default_backend(),
         "config": {"batch": batch, "frames": frames, "uavs": uavs,
                    "p2_steps": steps, "repeats": repeats,
-                   "sample_frames": sample_frames, "smoke": smoke},
+                   "sample_frames": sample_frames, "smoke": smoke,
+                   "device_counts": list(device_counts)},
     }
 
     ro = bench_rollout(batch, frames, uavs, steps, repeats, sample_frames)
@@ -191,6 +278,21 @@ def run(batch: int = 256, frames: int = 32, uavs: int = 8, steps: int = 30,
     print(f"parity  : feasibility agrees={par['feasibility_agrees']}, "
           f"max rel err latency {par['max_latency_rel_err']:.2e} / power "
           f"{par['max_power_rel_err']:.2e}")
+
+    sweep = bench_devices(batch, frames, uavs, steps,
+                          max(2, repeats // 2), device_counts)
+    result["devices_sweep"] = sweep
+    for n, entry in sweep["counts"].items():
+        if "skipped" in entry:
+            print(f"sharded : {n} devices skipped ({entry['skipped']})")
+        else:
+            ragged = entry.get("ragged")
+            print(f"sharded : {n} devices: "
+                  f"{entry['frames_per_s']:.0f} frames/s, max stat dev "
+                  f"{entry['max_stat_abs_dev_vs_1dev']:.1e}, "
+                  f"{entry['retraces_after_first']} retraces"
+                  + (f", ragged B={ragged['batch']} padded to "
+                     f"{ragged['padded_to']}" if ragged else ""))
 
     assert ro["retraces_after_first"] == 0, \
         "rollout retraced across repeated runs"
@@ -217,18 +319,26 @@ def main(argv=None) -> Dict:
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--sample-frames", type=int, default=4,
                     help="legacy frames timed (extrapolated to B*T)")
+    ap.add_argument("--devices", type=str, default=None,
+                    help="comma-separated device counts for the sharded "
+                         "sweep, e.g. 1,2,8 (default: {1,2,4,8} capped to "
+                         "what is available; on CPU force more via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-sized run; no speedup asserts")
     ap.add_argument("--json", type=str, default=None,
                     help="write the result dict to this path")
     args = ap.parse_args(argv)
+    counts = None if args.devices is None else \
+        sorted({int(x) for x in args.devices.split(",") if x.strip()})
     if args.smoke:
         cfg = dict(batch=8, frames=4, uavs=4, steps=30, repeats=2,
-                   sample_frames=2, smoke=True)
+                   sample_frames=2, smoke=True, device_counts=counts)
     else:
         cfg = dict(batch=args.batch, frames=args.frames, uavs=args.uavs,
                    steps=args.steps, repeats=args.repeats,
-                   sample_frames=args.sample_frames)
+                   sample_frames=args.sample_frames, device_counts=counts)
     result = run(**cfg)
     if args.json:
         with open(args.json, "w", encoding="utf-8") as f:

@@ -349,8 +349,19 @@ def _frame_tx_time_multi(assign, n_req, rate, act_bits, input_bits):
 def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
                     act_bits, input_bits, mem_cap, compute_cap, throughput,
                     order: Tuple[int, ...], spec: RolloutSpec,
-                    p2: Optional[PositionSpec] = None):
+                    p2: Optional[PositionSpec] = None,
+                    mesh=None):
     """Compile the (B, T) fleet rollout: ONE jit call, zero host crossings.
+
+    With ``mesh`` (a 1-D ``jax.sharding.Mesh``, e.g. from
+    ``repro.parallel.sharding.fleet_mesh``) the trajectory axis B is SPMD-
+    sharded over the mesh via ``shard_map``: every device runs the
+    IDENTICAL frame scan on its B/n slice of the host-drawn random streams
+    and arrival tensors (trajectories are embarrassingly independent — no
+    collective ever runs inside the scan), so fleet Monte Carlo scales to
+    the B the device count affords instead of what one device holds.  B
+    must be divisible by the mesh size; ``FleetRollout.run`` pads ragged
+    batches and threads the validity mask into every trace statistic.
 
     The returned callable takes
 
@@ -457,7 +468,24 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
         _, outs = jax.lax.scan(frame, (pos0, alive0, charge0), xs)
         return outs
 
-    return jax.jit(rollout)
+    if mesh is None:
+        return jax.jit(rollout)
+
+    # SPMD over the trajectory axis: the [B, ...] initial-state arrays
+    # shard on dim 0, the [T, B, ...] per-frame streams on dim 1, and every
+    # output stack is [T, B, ...] again.  on_trace() fires once per XLA
+    # trace exactly like the unsharded path, so retrace accounting is
+    # mesh-transparent.
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import shard_map_compat
+    axis = mesh.axis_names[0]
+    b_spec, tb_spec = P(axis), P(None, axis)
+    sharded = shard_map_compat(
+        rollout, mesh,
+        in_specs=(b_spec, b_spec, b_spec, b_spec,
+                  tb_spec, tb_spec, tb_spec, tb_spec, tb_spec),
+        out_specs=tb_spec)
+    return jax.jit(sharded)
 
 
 # ---------------------------------------------------------------------------

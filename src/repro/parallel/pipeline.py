@@ -28,18 +28,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Pytree = Any
 
 
-def _shard_map(f, mesh: Mesh, in_specs, out_specs):
-    """shard_map across jax versions: ``jax.shard_map`` (jax >= 0.6, where
-    replication checking is ``check_vma``) with a fallback to
-    ``jax.experimental.shard_map`` (jax 0.4/0.5, where it is ``check_rep``).
-    Replication checking is disabled either way: the last-stage psum install
-    pattern is not inferable."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as exp_shard_map
-    return exp_shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_rep=False)
+# the version shim lives in repro.parallel.sharding now (the fleet rollout
+# shards its trajectory axis through the same entry point); this alias keeps
+# the pipeline module's historical name working
+from repro.parallel.sharding import shard_map_compat as _shard_map
 
 
 def stage_params(params_per_block: Sequence[Pytree],

@@ -19,12 +19,87 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: ``jax.shard_map`` (jax >= 0.6,
+    where replication checking is ``check_vma``) with a fallback to
+    ``jax.experimental.shard_map`` (jax 0.4/0.5, where it is ``check_rep``).
+    Replication checking is disabled either way — the callers' collective
+    patterns (last-stage psum install, per-shard scan) are not inferable."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as exp_shard_map
+    return exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# 1-D fleet meshes (the rollout's trajectory axis) + topology signatures
+# ---------------------------------------------------------------------------
+
+#: Axis name of the 1-D fleet-rollout mesh (the B trajectory axis).
+FLEET_AXIS = "traj"
+
+
+def fleet_mesh(devices: Union[None, int, Sequence, Mesh] = None,
+               axis: str = FLEET_AXIS) -> Optional[Mesh]:
+    """A 1-D mesh over ``devices`` for batch-axis (trajectory) sharding.
+
+    ``devices`` may be an existing ``Mesh`` (returned unchanged — callers
+    can build fancier topologies themselves), an int n (the first n local
+    devices; n must not exceed ``jax.device_count()``), an explicit device
+    sequence, or None (all local devices).  On CPU, multiple devices exist
+    only under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    if isinstance(devices, Mesh):
+        return devices
+    if devices is None:
+        devs = jax.devices()
+    elif isinstance(devices, int):
+        avail = jax.devices()
+        if devices < 1 or devices > len(avail):
+            raise ValueError(
+                f"requested a {devices}-device mesh but {len(avail)} "
+                f"device(s) are available (on CPU, force more with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        devs = avail[:devices]
+    else:
+        devs = list(devices)
+        if not devs:
+            raise ValueError("fleet_mesh needs at least one device")
+    return Mesh(np.array(devs), (axis,))
+
+
+def mesh_signature(mesh: Optional[Mesh]) -> Optional[tuple]:
+    """Hashable device-topology token for compiled-program cache keys.
+
+    Two programs compiled under different meshes (or one under a mesh and
+    one without) are DIFFERENT XLA executables even when every traced op
+    matches — the mesh is baked into the lowering.  Cache keys must carry
+    this signature so they never collide (``PlanFnCache``)."""
+    if mesh is None:
+        return None
+    devs = tuple(int(d.id) for d in mesh.devices.flat)
+    platform = mesh.devices.flat[0].platform
+    return ("mesh", mesh.axis_names, tuple(mesh.devices.shape), platform,
+            devs)
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    """Smallest padded size >= n divisible by ``multiple`` (shard_map needs
+    the sharded axis divisible by the mesh axis size)."""
+    if multiple <= 1:
+        return n
+    return ((n + multiple - 1) // multiple) * multiple
 
 
 def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -20,12 +20,14 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.rollout import (RolloutSpec, make_rollout_fn,
                                 percentile_with_inf)
+from repro.parallel.sharding import (fleet_mesh, mesh_signature,
+                                     pad_to_multiple)
 from repro.runtime.scenario_engine import ScenarioEngine
 
 
@@ -43,7 +45,15 @@ class RolloutTrace:
     transmits nothing); ``charge`` the battery state AFTER each frame's
     drain; ``active`` the UAVs the frame actually planned over (alive AND
     powered); ``n_requests`` the served arrival counts (arrivals drawn on a
-    dead UAV are captured by the first survivor)."""
+    dead UAV are captured by the first survivor).
+
+    ``valid`` marks the trajectories the CALLER asked for.  A mesh-sharded
+    run pads B up to a multiple of the device count (``shard_map`` needs
+    the sharded axis divisible), and the padded rows — pure shard filler —
+    stay in the arrays so the (B, T) layout matches what came off the
+    devices; every aggregate statistic below masks them out, which is what
+    makes the statistics shard-count invariant.  Unsharded runs have all
+    rows valid."""
 
     latency: np.ndarray         # [B, T] arrival-weighted (inf = infeasible)
     total_power: np.ndarray     # [B, T] 0 on infeasible frames
@@ -57,10 +67,19 @@ class RolloutTrace:
     n_requests: np.ndarray      # [B, T, U] served arrivals per source
     energy_tx: np.ndarray       # [B, T, U] J
     energy_cmp: np.ndarray      # [B, T, U] J
+    valid: Optional[np.ndarray] = None   # [B] bool; None = every row real
+
+    def _valid(self) -> np.ndarray:
+        """[B] mask of caller-requested trajectories (padding excluded)."""
+        if self.valid is None:
+            return np.ones(self.latency.shape[0], dtype=bool)
+        return self.valid
 
     @property
     def n_trajectories(self) -> int:
-        return self.latency.shape[0]
+        """Trajectories the caller asked for (mesh padding rows excluded —
+        ``latency.shape[0]`` may be larger after a sharded ragged run)."""
+        return int(self._valid().sum())
 
     @property
     def n_frames(self) -> int:
@@ -68,29 +87,35 @@ class RolloutTrace:
 
     @property
     def feasibility_rate(self) -> float:
-        """Fraction of (trajectory, frame) points with a feasible plan."""
-        return float(self.feasible.mean()) if self.feasible.size else 0.0
+        """Fraction of VALID (trajectory, frame) points with a feasible
+        plan."""
+        feas = self.feasible[self._valid()]
+        return float(feas.mean()) if feas.size else 0.0
 
     @property
     def mean_latency(self) -> float:
-        """Mean arrival-weighted latency over FEASIBLE frames (inf when
-        none) — always read next to ``feasibility_rate``: the mean alone
-        can hide an arbitrarily broken fleet."""
-        vals = self.latency[self.feasible]
+        """Mean arrival-weighted latency over FEASIBLE frames of valid
+        trajectories (inf when none) — always read next to
+        ``feasibility_rate``: the mean alone can hide an arbitrarily
+        broken fleet."""
+        m = self._valid()
+        vals = self.latency[m][self.feasible[m]]
         return float(vals.mean()) if vals.size else float("inf")
 
     @property
     def mean_power(self) -> float:
-        """Mean tightened transmit power over FEASIBLE frames only
-        (mirroring ``mean_latency``): an infeasible frame serves nothing,
-        so its powers must not dilute or inflate the statistic."""
-        vals = self.total_power[self.feasible]
+        """Mean tightened transmit power over FEASIBLE frames of valid
+        trajectories only (mirroring ``mean_latency``): an infeasible
+        frame serves nothing, so its powers must not dilute or inflate the
+        statistic."""
+        m = self._valid()
+        vals = self.total_power[m][self.feasible[m]]
         return float(vals.mean()) if vals.size else 0.0
 
     def latency_percentile(self, q: float) -> float:
-        """Ensemble percentile over ALL (trajectory, frame) points,
+        """Ensemble percentile over ALL valid (trajectory, frame) points,
         infeasible frames included as inf (outages must show up in SLOs)."""
-        return percentile_with_inf(self.latency, q)
+        return percentile_with_inf(self.latency[self._valid()], q)
 
     def frame_stats(self, trajectory: int = 0) -> List["FrameStats"]:
         """One trajectory as the legacy ``SwarmSim`` per-frame records.
@@ -102,6 +127,10 @@ class RolloutTrace:
         absorbed a loss."""
         from repro.core.swarm import FrameStats
         b = trajectory
+        if not self._valid()[b]:
+            raise IndexError(
+                f"trajectory {b} is mesh-padding filler, not a requested "
+                f"trajectory (n_trajectories = {self.n_trajectories})")
         out: List[FrameStats] = []
         prev_active = None
         for t in range(self.n_frames):
@@ -124,29 +153,66 @@ class FleetRollout(ScenarioEngine):
 
     Extends ``ScenarioEngine`` with a compiled rollout callable resolved
     through the same ``PlanFnCache``: the rollout's cache key is the fused
-    plan's static signature plus the ``RolloutSpec`` dynamics constants, so
-    rebuilding a ``FleetRollout`` (a new ``SwarmSim``, a benchmark rerun, a
-    replanner lookahead) never re-traces.  The scan length T comes from the
-    input arrays — a different horizon re-executes the same callable (one
+    plan's static signature plus the ``RolloutSpec`` dynamics constants
+    PLUS the mesh signature (``repro.parallel.sharding.mesh_signature``) —
+    a mesh-sharded scan and the single-device scan are different XLA
+    executables and must never collide on one entry — so rebuilding a
+    ``FleetRollout`` (a new ``SwarmSim``, a benchmark rerun, a replanner
+    lookahead) never re-traces.  The scan length T comes from the input
+    arrays — a different horizon re-executes the same callable (one
     retrace per new (B, T) shape, counted by ``trace_count``).
+
+    ``mesh=`` / ``devices=`` (constructor default, overridable per
+    ``run``) shard the trajectory axis over a 1-D device mesh
+    (``fleet_mesh``): ragged B is padded up to the mesh size and masked
+    back out via ``RolloutTrace.valid``.
     """
 
     def __init__(self, channel, devices, model, spec: RolloutSpec,
                  device_order=None, act_scale: float = 1.0,
-                 plan_cache=None, position_spec=None, seed: int = 0):
+                 plan_cache=None, position_spec=None, seed: int = 0,
+                 mesh=None, mesh_devices: Union[None, int, Sequence] = None):
         super().__init__(channel, devices, model, device_order=device_order,
                          act_scale=act_scale, plan_cache=plan_cache,
                          position_spec=position_spec)
         self.spec = spec
         self._rng = np.random.default_rng(seed)
-        rollout_key = ("rollout", spec.key()) + self._cache_key()[1:]
-        self._cache_keys_used = self._cache_keys_used + (rollout_key,)
-        self._rollout = self.plan_cache.get(rollout_key, partial(
+        self._default_mesh = self._resolve_mesh(mesh, mesh_devices)
+        self._rollout = self._rollout_fn(self._default_mesh)
+
+    @staticmethod
+    def _resolve_mesh(mesh, devices):
+        """One mesh from the (mesh=, devices=) pair; None = single device.
+
+        ``devices`` is an int (first n local devices) or a device
+        sequence; a 1-device request collapses to the plain single-device
+        jit (sharding over one device adds nothing but a distinct
+        executable)."""
+        if mesh is not None and devices is not None:
+            raise ValueError("pass either mesh or devices, not both")
+        if mesh is None and devices is None:
+            return None
+        if devices == 1:
+            return None
+        return fleet_mesh(mesh if mesh is not None else devices)
+
+    def _rollout_fn(self, mesh):
+        """The compiled rollout for ``mesh``, through the shared cache.
+
+        The key carries ``mesh_signature(mesh)``: a single-device rollout
+        (signature None) and every distinct mesh each get their own entry
+        and their own (exactly one) trace."""
+        rollout_key = ("rollout", mesh_signature(mesh), self.spec.key()) \
+            + self._cache_key()[1:]
+        if rollout_key not in self._cache_keys_used:
+            self._cache_keys_used = self._cache_keys_used + (rollout_key,)
+        return self.plan_cache.get(rollout_key, partial(
             make_rollout_fn, params=self.params, compute=self.compute,
             memory=self.memory, act_bits=self.act_bits,
             input_bits=self.input_bits, mem_cap=self.mem_cap,
             compute_cap=self.compute_cap, throughput=self.throughput,
-            order=self.order, spec=spec, p2=self.position_spec))
+            order=self.order, spec=self.spec, p2=self.position_spec,
+            mesh=mesh))
 
     # ------------------------------------------------------------------
     def _arrival_probs(self) -> np.ndarray:
@@ -167,7 +233,9 @@ class FleetRollout(ScenarioEngine):
             forced_failures: Optional[Sequence[Tuple[int, int]]] = None,
             sources: Optional[np.ndarray] = None,
             arrivals: Optional[np.ndarray] = None,
-            waypoints: Optional[np.ndarray] = None) -> RolloutTrace:
+            waypoints: Optional[np.ndarray] = None,
+            mesh=None,
+            devices: Union[None, int, Sequence] = None) -> RolloutTrace:
         """Roll B trajectories forward T frames in one device call.
 
         ``base_positions``: [U, 2] (tiled over trajectories) or [B, U, 2].
@@ -185,8 +253,17 @@ class FleetRollout(ScenarioEngine):
         ``waypoints``: optional [B, U, 2] drift targets (default: drawn in
         ``spec.waypoint_range_m`` around each UAV's start, or the start
         itself when the range is 0 — pure jitter mobility).
+        ``mesh`` / ``devices``: shard the trajectory axis over a 1-D device
+        mesh for THIS run (overriding the constructor default; mutually
+        exclusive with each other).  All randomness is drawn for the
+        requested B BEFORE padding, so a sharded run consumes bit-identical
+        host streams to the single-device run it is compared against; B is
+        then edge-padded up to a mesh-size multiple and the filler rows
+        masked out via ``RolloutTrace.valid``.
         """
+        import jax
         import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
 
         U = len(self.devices)
         B = n_trajectories
@@ -249,12 +326,43 @@ class FleetRollout(ScenarioEngine):
         if alive0 is None:
             alive0 = np.ones((B, U), dtype=bool)
 
+        if mesh is not None or devices is not None:
+            run_mesh = self._resolve_mesh(mesh, devices)
+        else:
+            run_mesh = self._default_mesh
+        rollout = self._rollout if run_mesh is self._default_mesh \
+            else self._rollout_fn(run_mesh)
+
+        valid = None
+        inputs = [np.asarray(pos0, np.float32), charge0, alive0,
+                  np.asarray(waypoints, np.float32), jitter, fail_u,
+                  recov_u, forced, np.asarray(arrivals, np.float32)]
+        if run_mesh is None:
+            inputs = [jnp.asarray(x) for x in inputs]
+        else:
+            # pad ragged B up to the mesh size with edge rows (real data,
+            # so the filler never produces NaN/inf surprises), record the
+            # validity mask, and place every input under its
+            # NamedSharding so the host->device transfer itself is already
+            # sharded — no full replica ever materializes on one device.
+            n_dev = run_mesh.devices.size
+            Bpad = pad_to_multiple(B, n_dev)
+            if Bpad != B:
+                pad = Bpad - B
+                inputs = [
+                    np.pad(x, [(0, pad) if d == bdim else (0, 0)
+                               for d in range(x.ndim)], mode="edge")
+                    for x, bdim in zip(inputs, (0, 0, 0, 0, 1, 1, 1, 1, 1))]
+                valid = np.arange(Bpad) < B
+            axis = run_mesh.axis_names[0]
+            b_sh = NamedSharding(run_mesh, P(axis))
+            tb_sh = NamedSharding(run_mesh, P(None, axis))
+            inputs = [jax.device_put(x, sh) for x, sh in zip(
+                inputs, (b_sh, b_sh, b_sh, b_sh,
+                         tb_sh, tb_sh, tb_sh, tb_sh, tb_sh))]
+
         (pos, active, charge, latency, power, feasible, cap_ok, assign,
-         lat_src, n_eff, e_tx, e_cmp) = self._rollout(
-            jnp.asarray(pos0), jnp.asarray(charge0), jnp.asarray(alive0),
-            jnp.asarray(waypoints, jnp.float32), jnp.asarray(jitter),
-            jnp.asarray(fail_u), jnp.asarray(recov_u), jnp.asarray(forced),
-            jnp.asarray(arrivals))
+         lat_src, n_eff, e_tx, e_cmp) = rollout(*inputs)
 
         def tm(x, dtype=np.float64):        # [T, B, ...] -> [B, T, ...]
             arr = np.asarray(x)
@@ -266,7 +374,7 @@ class FleetRollout(ScenarioEngine):
             source_latency=tm(lat_src), assign=tm(assign, np.int64),
             positions=tm(pos), active=tm(active, bool), charge=tm(charge),
             n_requests=tm(n_eff, np.int64),
-            energy_tx=tm(e_tx), energy_cmp=tm(e_cmp))
+            energy_tx=tm(e_tx), energy_cmp=tm(e_cmp), valid=valid)
 
 
 __all__ = ["FleetRollout", "RolloutTrace", "RolloutSpec"]

@@ -154,6 +154,13 @@ class PlanFnCache:
     batch sizes under each entry, so a steady workload (fixed B) compiles
     exactly once per signature.
 
+    Keys for MESH-SHARDED programs must additionally carry the device
+    topology (``repro.parallel.sharding.mesh_signature``, as the fleet
+    rollout's keys do): a ``shard_map``-lowered executable is specialized
+    to its mesh, so a single-device program and an n-device program — or
+    two different meshes — can never share an entry, and each owns its own
+    once-only trace.
+
     ``traces`` counts *actual retraces* per key: the counter is bumped from
     inside the traced body, so it only moves when XLA really recompiles.
     Tests and benchmarks assert it stays flat across frames.

@@ -8,7 +8,16 @@ import math
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+# `hypothesis` is deliberately NOT a runtime dependency (nothing in
+# src/repro imports it) — it is a dev-only extra that CI installs in every
+# tier-1 job, so these tests DO run on every push; the skip fires only in
+# local environments that haven't installed it.  `pip install hypothesis`
+# re-enables the module.  This is a reasoned environment guard, not a stale
+# xfail: do not remove it without making hypothesis a hard dependency.
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional dev dependency `hypothesis` "
+           "(CI installs it; `pip install hypothesis` re-enables locally)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Device, PlacementProblem, RadioChannel, RadioParams,
@@ -302,6 +311,71 @@ class TestRolloutBatteryProperties:
         # over-budget frames (if any were drawn) are flagged infeasible
         over = (load > caps[None, :] * (1 + 1e-6) + 1e-9).any(-1)
         assert not trace.feasible[over].any()
+
+
+class TestShardInvarianceProperties:
+    """Mesh-size invariance of the sharded fleet rollout (ISSUE 6).
+
+    The trajectory axis is embarrassingly parallel, so every
+    ``RolloutTrace`` aggregate statistic must be invariant to how B is
+    sharded over a 1-D mesh — for ANY dynamics draw.  Hypothesis varies
+    the data (B, initial charge, seed — hence mobility/failure/arrival
+    streams); the engine constants and T are fixed per U so examples
+    don't force an XLA recompile each (spec constants are baked into the
+    trace), and B varies only within a small set (one trace per new
+    (mesh, B-shard) shape, amortized across examples by the process-wide
+    plan cache).  Mesh sizes are whatever the runtime offers: on a plain
+    CPU run only {1}, under ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=8`` (the tier1-multidevice CI job) {1, 2, 4, 8} —
+    including ragged B/mesh combinations that exercise the padding mask.
+    """
+
+    T = 3
+
+    @classmethod
+    def mesh_sizes(cls):
+        import jax
+        n = jax.local_device_count()
+        return [m for m in (1, 2, 4, 8) if m <= n]
+
+    @classmethod
+    def rollout(cls, u, seed):
+        """A fresh FleetRollout per call (same seed => same host streams)
+        over a per-U cached compile signature."""
+        from repro.core import RolloutSpec, cnn_cost, make_devices
+        from repro.configs.lenet import LENET
+        from repro.runtime.fleet_rollout import FleetRollout
+        spec = RolloutSpec(frames=cls.T, requests_per_frame=2,
+                           jitter_sigma_m=2.0, failure_prob=0.2,
+                           recovery_prob=0.3, hover_watts=0.05,
+                           battery_j=2e3, frame_s=1.0)
+        return FleetRollout(RadioChannel(), make_devices(u),
+                            cnn_cost(LENET), spec, seed=seed)
+
+    @given(st.integers(3, 4), st.sampled_from([1, 3, 5, 8]),
+           st.floats(0.1, 5.0), st.integers(0, 2 ** 31))
+    @settings(max_examples=8, deadline=None)
+    def test_statistics_invariant_to_mesh_size(self, u, b, scale, seed):
+        from repro.core.positions import hex_init
+        rng = np.random.default_rng(seed)
+        charge0 = (1e3 * scale *
+                   rng.uniform(0.2, 1.0, (b, u))).astype(np.float32)
+        base = hex_init(u, 40.0, jitter=1.0, seed=seed % 1000)
+        stats = []
+        for m in self.mesh_sizes():
+            trace = self.rollout(u, seed % 97).run(
+                base, n_trajectories=b, charge0=charge0, devices=m)
+            assert trace.n_trajectories == b      # padding masked back out
+            stats.append((trace.feasibility_rate, trace.mean_latency,
+                          trace.mean_power, trace.latency_percentile(50.0),
+                          trace.latency_percentile(95.0)))
+        ref = stats[0]
+        for got in stats[1:]:
+            for a, c in zip(ref, got):
+                if math.isinf(a) or math.isinf(c):
+                    assert a == c
+                else:
+                    assert abs(a - c) <= 1e-6 * max(1.0, abs(a))
 
 
 class TestCheckpointProperties:

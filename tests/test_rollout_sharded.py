@@ -1,0 +1,259 @@
+"""Mesh-sharded fleet rollouts: shard-invariance harness (ISSUE 6).
+
+The trajectory axis B of the (B, T) rollout is embarrassingly parallel, so
+sharding it over a 1-D device mesh (``FleetRollout.run(mesh=|devices=)``)
+must be INVISIBLE in every output: identical per-trajectory arrays,
+identical aggregate statistics (the acceptance bound is <= 1e-6; on CPU
+the shards are in fact bitwise equal), ragged B handled by padding plus
+the ``RolloutTrace.valid`` mask, and zero retraces after each mesh's first
+compile — with single-device and sharded programs living under DISTINCT
+``PlanFnCache`` keys (the mesh signature) so they can never collide.
+
+Multi-device cases need forced host devices on CPU::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_rollout_sharded.py
+
+which is exactly what the ``tier1-multidevice`` CI job sets for the whole
+suite; under the plain single-device tier-1 run those cases skip with a
+reason pointing here.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.lenet import LENET
+from repro.core import (PositionSpec, RadioChannel, RolloutSpec, cnn_cost,
+                        make_devices)
+from repro.core.positions import hex_init
+from repro.parallel.sharding import fleet_mesh, mesh_signature
+from repro.runtime.fleet_rollout import FleetRollout
+from repro.runtime.scenario_engine import (PlanFnCache, ScenarioEngine,
+                                           ScenarioGenerator)
+from repro.runtime.serve_loop import PeriodicReplanner
+
+CH = RadioChannel()
+MC = cnn_cost(LENET)
+N_DEV = jax.local_device_count()
+
+# one rich dynamics config used everywhere: mobility + failures +
+# recovery + battery drain + a 2-request multi-source stream, so the
+# parity claim covers every branch of the frame body
+SPEC = RolloutSpec(frames=4, requests_per_frame=2, jitter_sigma_m=2.0,
+                   failure_prob=0.15, recovery_prob=0.25, battery_j=5e3,
+                   hover_watts=0.5, frame_s=1.0)
+U = 5
+BASE = hex_init(U, 40.0, jitter=0.5, seed=1)
+
+# every array a RolloutTrace carries, with its comparison mode
+EXACT_FIELDS = ("feasible", "cap_feasible", "assign", "active",
+                "n_requests")
+CLOSE_FIELDS = ("latency", "total_power", "source_latency", "positions",
+                "charge", "energy_tx", "energy_cmp")
+
+
+def needs(n: int):
+    return pytest.mark.skipif(
+        N_DEV < n,
+        reason=f"needs {n} devices, have {N_DEV}; run under "
+               f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+               "(the tier1-multidevice CI job does)")
+
+
+def make_rollout(cache, seed=3, position_spec=None):
+    return FleetRollout(CH, make_devices(U), MC, SPEC, plan_cache=cache,
+                        position_spec=position_spec, seed=seed)
+
+
+def assert_traces_match(ref, got):
+    """``got`` (possibly padded) equals the unsharded ``ref`` row-for-row
+    on its valid trajectories, to the <= 1e-6 acceptance bound (inf
+    patterns exact)."""
+    sel = np.flatnonzero(got._valid())
+    assert len(sel) == ref.latency.shape[0]
+    for name in EXACT_FIELDS:
+        np.testing.assert_array_equal(getattr(got, name)[sel],
+                                      getattr(ref, name), err_msg=name)
+    for name in CLOSE_FIELDS:
+        a = getattr(ref, name)
+        b = getattr(got, name)[sel]
+        finite = np.isfinite(a)
+        np.testing.assert_array_equal(np.isfinite(b), finite, err_msg=name)
+        np.testing.assert_allclose(b[finite], a[finite], rtol=0, atol=1e-6,
+                                   err_msg=name)
+    # the aggregate statistics the acceptance criterion names
+    for stat in ("feasibility_rate", "mean_latency", "mean_power"):
+        assert abs(getattr(got, stat) - getattr(ref, stat)) <= 1e-6, stat
+    for q in (50.0, 95.0):
+        a, b = ref.latency_percentile(q), got.latency_percentile(q)
+        assert (a == b) if not np.isfinite(a) else abs(a - b) <= 1e-6
+
+
+class TestShardedParity:
+    """Sharded-vs-single-device parity at device counts {1, 2, 8}."""
+
+    B = 16
+
+    def _reference(self, cache):
+        return make_rollout(cache).run(BASE, n_trajectories=self.B)
+
+    @pytest.mark.parametrize("n", [
+        pytest.param(1),
+        pytest.param(2, marks=needs(2)),
+        pytest.param(8, marks=needs(8)),
+    ])
+    def test_parity_at_device_count(self, n):
+        cache = PlanFnCache()
+        ref = self._reference(cache)
+        got = make_rollout(cache).run(BASE, n_trajectories=self.B,
+                                      devices=n)
+        assert_traces_match(ref, got)
+        if n > 1:
+            assert got.valid is None          # 16 divides n: no padding
+
+    @needs(2)
+    def test_parity_with_fused_p2(self):
+        """The sharded scan embeds the SAME fused P2 warm-start path."""
+        cache = PlanFnCache()
+        pspec = PositionSpec(steps=50, repair_iters=25)
+        ref = make_rollout(cache, position_spec=pspec).run(
+            BASE, n_trajectories=4)
+        got = make_rollout(cache, position_spec=pspec).run(
+            BASE, n_trajectories=4, devices=2)
+        assert_traces_match(ref, got)
+
+    def test_explicit_one_device_mesh_matches_plain_path(self):
+        """A genuine 1-device shard_map program (explicit mesh) agrees
+        with the plain jit — and lives under its own cache key."""
+        cache = PlanFnCache()
+        mesh = fleet_mesh(1)
+        ref = self._reference(cache)
+        got = make_rollout(cache).run(BASE, n_trajectories=self.B,
+                                      mesh=mesh)
+        assert_traces_match(ref, got)
+        assert mesh_signature(mesh) is not None
+
+    @needs(8)
+    def test_ragged_batch_padding_mask(self):
+        """B = 100 on 8 devices: padded to 104 on the wire, masked back to
+        100 in every statistic, padded rows flagged invalid."""
+        B = 100
+        cache = PlanFnCache()
+        ref = make_rollout(cache).run(BASE, n_trajectories=B)
+        got = make_rollout(cache).run(BASE, n_trajectories=B, devices=8)
+        assert got.latency.shape[0] == 104       # ceil(100/8)*8
+        assert got.valid is not None
+        assert got.valid.sum() == B and got.valid[:B].all()
+        assert got.n_trajectories == B
+        assert_traces_match(ref, got)
+        # a padded row is filler: asking for its frame stats is an error
+        with pytest.raises(IndexError, match="padding"):
+            got.frame_stats(trajectory=101)
+        got.frame_stats(trajectory=0)            # real rows still work
+
+    @needs(2)
+    def test_host_streams_identical_before_padding(self):
+        """Randomness is drawn for the REQUESTED B before padding: a
+        ragged sharded run and the single-device run consume the same
+        arrival stream (visible in the served counts)."""
+        B = 3
+        cache = PlanFnCache()
+        ref = make_rollout(cache, seed=11).run(BASE, n_trajectories=B)
+        got = make_rollout(cache, seed=11).run(BASE, n_trajectories=B,
+                                               devices=2)
+        np.testing.assert_array_equal(got.n_requests[got._valid()],
+                                      ref.n_requests)
+
+
+class TestShardedRetraces:
+    """0-retrace assertions across repeated sharded runs, and the mesh-
+    signature cache-key regression (the PlanFnCache bugfix)."""
+
+    @needs(2)
+    def test_zero_retraces_across_repeated_sharded_runs(self):
+        cache = PlanFnCache()
+        ro = make_rollout(cache)
+        ro.run(BASE, n_trajectories=4, devices=2)
+        traces = ro.trace_count
+        assert traces >= 1
+        for _ in range(3):
+            ro.run(BASE, n_trajectories=4, devices=2)
+        assert ro.trace_count == traces
+        # a REBUILT rollout on the same mesh shares the compiled scan
+        ro2 = make_rollout(cache, seed=9)
+        ro2.run(BASE, n_trajectories=4, devices=2)
+        assert ro2.trace_count == traces
+
+    @needs(8)
+    def test_mesh_signature_keys_never_collide(self):
+        """The regression the bugfix satellite pins: a 1-device rollout
+        followed by an 8-device rollout is 2 distinct cache entries — 2
+        misses, 2 traces — and re-running EITHER adds hits, never traces.
+        Before the mesh signature entered the key, the second program
+        would have reused (and clobbered) the first entry."""
+        cache = PlanFnCache()
+        ro = make_rollout(cache)
+        misses0 = cache.misses          # engine __init__ already missed
+        ro.run(BASE, n_trajectories=8)              # 1-device program
+        ro.run(BASE, n_trajectories=8, devices=8)   # 8-device program
+        assert cache.misses - misses0 == 1   # the sharded key is new
+        keys = [k for k in ro._cache_keys_used if k[0] == "rollout"]
+        assert len(keys) == 2
+        assert keys[0][1] is None                   # single-device
+        assert keys[1][1] is not None and keys[1][1][0] == "mesh"
+        assert cache.trace_count(keys) == 2
+        hits0 = cache.hits
+        ro.run(BASE, n_trajectories=8)
+        ro.run(BASE, n_trajectories=8, devices=8)
+        assert cache.trace_count(keys) == 2         # 0 retraces
+        assert cache.hits > hits0
+
+    def test_mesh_and_devices_are_mutually_exclusive(self):
+        ro = make_rollout(PlanFnCache())
+        with pytest.raises(ValueError, match="not both"):
+            ro.run(BASE, mesh=fleet_mesh(1), devices=1)
+        with pytest.raises(ValueError, match="available"):
+            ro.run(BASE, devices=N_DEV + 1)
+
+
+class TestShardedRuntimeIntegration:
+    @needs(2)
+    def test_replanner_horizon_lookahead_sharded(self):
+        """The PeriodicReplanner's horizon lookahead rides the mesh: same
+        feasibility pricing, 0 retraces across refreshes, ragged
+        trajectory count (3 on 2 devices) masked transparently."""
+        cache = PlanFnCache()
+        engine = ScenarioEngine(CH, make_devices(U), MC, plan_cache=cache)
+        ro = make_rollout(cache)
+        rp = PeriodicReplanner(engine, ScenarioGenerator(BASE, seed=0),
+                               period=2, n_scenarios=4, rollout=ro,
+                               rollout_horizon=3, rollout_trajectories=3,
+                               rollout_devices=2)
+        for f in range(4):
+            rp.tick(f)
+        assert rp.refreshes == 2
+        assert rp.retraces == 0
+        assert rp.horizon is not None
+        assert rp.horizon.n_trajectories == 3     # padding masked
+        assert rp.horizon.latency.shape[0] == 4   # padded to the mesh
+        assert 0.0 <= rp.horizon_feasibility <= 1.0
+        assert rp.horizon_latency(50.0) > 0.0
+
+    @needs(2)
+    def test_constructor_default_mesh(self):
+        """A FleetRollout built with mesh_devices= shards every run by
+        default, and a per-run devices=1 override falls back to the
+        single-device program."""
+        cache = PlanFnCache()
+        def sharded_by_default():
+            return FleetRollout(CH, make_devices(U), MC, SPEC,
+                                plan_cache=cache, seed=3, mesh_devices=2)
+
+        got = sharded_by_default().run(BASE, n_trajectories=4)
+        ref = make_rollout(cache).run(BASE, n_trajectories=4)
+        assert_traces_match(ref, got)
+        # per-run devices=1 override falls back to the single-device
+        # program (fresh object: the host RNG is stateful per instance)
+        over = sharded_by_default().run(BASE, n_trajectories=4, devices=1)
+        assert_traces_match(ref, over)
