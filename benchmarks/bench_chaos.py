@@ -1,0 +1,349 @@
+"""Benchmark: recovery under chaos — MTTR, degraded frames, ladder cost.
+
+One seeded ``FaultSchedule`` drives both halves of the robustness stack
+(``docs/robustness.md``) and this benchmark prices what the mechanisms
+actually buy:
+
+* ``device_side`` — correlated burst failures (spatially clustered,
+  Markov-persistent) injected IN-TRACE through the rollout's ``forced
+  [T, B, U]`` hook on a split-forced fleet (LeNet overflows one UAV's
+  memory cap, so the chain must span links and every death hurts).  For
+  each burst size the trace yields per-trajectory MTTR (frames from the
+  burst until latency returns to the pre-burst baseline) and the
+  degraded-frame fraction — the in-trace recovery curve vs blast radius.
+  The same schedule replayed from a fresh rollout must reproduce the
+  stats bitwise.
+* ``ladder`` — the host-side recovery ladder end to end:
+  scenario A (single crash, contingency armed) must recover from the
+  PRECOMPUTED table; scenario B (burst of 3, one scan) must fall through
+  to a live re-solve over the survivors; neither may ever install a plan
+  addressing a dead device.  The contingency-hit vs live-replan recovery
+  cost is timed (table lookup vs warm survivor re-solve).
+* ``retraces`` — every section shares ONE ``PlanFnCache``; the whole
+  chaos run must pay ZERO retraces (each compiled variant traces once).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_chaos.py
+        [--batch 64] [--uavs 6] [--frames 40] [--smoke]
+        [--json BENCH_chaos.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+
+# allow `python benchmarks/bench_chaos.py` from the repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.configs.lenet import LENET
+from repro.core import (RadioChannel, RadioParams, RolloutSpec, PositionSpec,
+                        cnn_cost, make_devices)
+from repro.core.positions import hex_init
+from repro.runtime.chaos import ChaosHostDriver, FaultSchedule
+from repro.runtime.fault_tolerance import FaultTolerantRunner, HealthTracker
+from repro.runtime.fleet_rollout import FleetRollout
+from repro.runtime.scenario_engine import (ContingencyTable, PlanFnCache,
+                                           ScenarioBatch, ScenarioEngine,
+                                           ScenarioGenerator)
+from repro.runtime.serve_loop import (PeriodicReplanner, ReplanController,
+                                      ServiceLevelObjective)
+
+PARAMS = RadioParams()
+CH = RadioChannel(PARAMS)
+MC = cnn_cost(LENET)
+SPLIT_MEM_FRAC = 2e-4      # LeNet overflows one UAV -> forced chain split
+
+
+def _trace_stats(trace) -> Dict:
+    return {"feasibility_rate": trace.feasibility_rate,
+            "mean_latency": trace.mean_latency,
+            "latency_p95": trace.latency_percentile(95.0)}
+
+
+def bench_device_side(uavs: int, frames: int, batch: int, burst_frame: int,
+                      burst_sizes: List[int], cache: PlanFnCache,
+                      seed: int = 7) -> Dict:
+    """In-trace burst recovery: MTTR and degraded frames vs blast radius."""
+    devs = make_devices(uavs, mem_frac=SPLIT_MEM_FRAC)
+    pos = hex_init(uavs, 40.0, jitter=0.5, seed=1)
+    spec = RolloutSpec(frames=frames, recovery_prob=0.5)
+
+    # pin every frame's capture to UAV 0: the pre-burst latency is then a
+    # CONSTANT baseline, so "recovered" = back at baseline is exact (the
+    # arrival remap serves off the first survivor while 0 is down)
+    sources = np.zeros((frames, batch), np.int64)
+
+    def run(size: int, seed_offset: int = 0):
+        sched = FaultSchedule(uavs, frames, seed=seed + size) \
+            .burst(burst_frame, size, persistence=0.7)
+        ro = FleetRollout(CH, devs, MC, spec, plan_cache=cache,
+                          seed=seed + seed_offset)
+        t0 = time.perf_counter()
+        trace = ro.run(pos, n_trajectories=batch, sources=sources,
+                       **sched.rollout_inputs(batch, pos))
+        jax.block_until_ready(())
+        return trace, time.perf_counter() - t0, sched
+
+    points = []
+    for size in burst_sizes:
+        trace, wall, sched = run(size)
+        lat = np.asarray(trace.latency)                       # [B, T]
+        base = lat[:, burst_frame - 1]
+        assert np.isfinite(base).all(), \
+            "pre-burst fleet must be feasible — bad baseline geometry"
+        # recovered = latency back at the (static-geometry) baseline
+        post = lat[:, burst_frame:]
+        ok = post <= base[:, None] * (1.0 + 1e-6)
+        mttr = np.where(ok.any(1), ok.argmax(1), post.shape[1]).astype(float)
+        recovered = ok.any(1)
+        degraded = float((~ok).mean())
+        points.append({
+            "burst_size": size,
+            "burst_members": [int(u) for u in
+                              sched.burst_members(pos)[0]],
+            "mttr_frames_mean": float(mttr[recovered].mean())
+            if recovered.any() else float("inf"),
+            "mttr_frames_p95": float(np.percentile(mttr[recovered], 95))
+            if recovered.any() else float("inf"),
+            "recovered_fraction": float(recovered.mean()),
+            "degraded_frame_fraction": degraded,
+            "rollout_wall_s": wall,
+            **_trace_stats(trace),
+        })
+        print(f"device_side : burst={size} mttr="
+              f"{points[-1]['mttr_frames_mean']:.2f} frames, degraded="
+              f"{degraded:.3f}, recovered={recovered.mean():.2f}, "
+              f"feas={trace.feasibility_rate:.3f}")
+
+    # replay determinism: a fresh rollout, same seeds -> bitwise stats
+    t1, _, _ = run(burst_sizes[-1])
+    t2, _, _ = run(burst_sizes[-1])
+    replay_ok = (np.array_equal(np.asarray(t1.latency),
+                                np.asarray(t2.latency)) and
+                 np.array_equal(np.asarray(t1.active),
+                                np.asarray(t2.active)))
+    print(f"device_side : replay bitwise identical: {replay_ok}")
+    return {"burst_frame": burst_frame, "batch": batch,
+            "recovery_prob": spec.recovery_prob, "persistence": 0.7,
+            "points": points, "replay_bitwise_identical": replay_ok}
+
+
+def bench_ladder(uavs: int, frames: int, cache: PlanFnCache,
+                 repeats: int, smoke: bool) -> Dict:
+    """Host-side ladder: contingency hit vs live replan, full recovery,
+    survivor-only plans, and the cost of each recovery path."""
+    devs = make_devices(uavs, mem_frac=SPLIT_MEM_FRAC)
+    base = hex_init(uavs, 40.0, jitter=0.5, seed=1)
+    names = [d.name for d in devs]
+    name_to_idx = {n: i for i, n in enumerate(names)}
+
+    def make_replan(live_calls: List[float]):
+        def replan(survivors):
+            t0 = time.perf_counter()
+            eng = ScenarioEngine(CH, list(survivors), MC, plan_cache=cache)
+            idx = [name_to_idx[d.name] for d in survivors]
+            sb = ScenarioBatch(positions=base[idx][None],
+                               source=np.zeros(1, np.int64))
+            plan = eng.plan_batch(sb)
+            jax.block_until_ready(())
+            live_calls.append(time.perf_counter() - t0)
+            return {"devices": [d.name for d in survivors],
+                    "assign": np.asarray(plan.assign[0]),
+                    "latency": float(plan.latency[0])}
+        return replan
+
+    def survivor_only(runner) -> bool:
+        """The installed plan may only address surviving devices."""
+        plan = runner.state.plan
+        n = len(runner.state.devices)
+        if hasattr(plan, "assign"):                    # ContingencyPlan
+            return max(plan.assign) < n
+        used = set(int(a) for a in np.asarray(plan["assign"]).ravel()
+                   if a >= 0)
+        return used <= set(range(n))
+
+    def run_scenario(kind: str, sched: FaultSchedule) -> Dict:
+        live_calls: List[float] = []
+        engine = ScenarioEngine(CH, devs, MC, plan_cache=cache)
+        table = ContingencyTable(engine, base, source=0)
+        tracker = HealthTracker(names, timeout_s=2.5, now=0.0)
+        runner = FaultTolerantRunner(devs, make_replan(live_calls), ".",
+                                     contingency=table, health=tracker,
+                                     straggler_cooldown_s=5.0)
+        gen = ScenarioGenerator(base, pos_sigma_m=1.0, seed=0)
+        ro = FleetRollout(CH, devs, MC,
+                          RolloutSpec(frames=4, jitter_sigma_m=1.0),
+                          plan_cache=cache, seed=0)
+        rp = PeriodicReplanner(engine, gen, period=4,
+                               n_scenarios=2 if smoke else 8,
+                               rollout=ro, rollout_horizon=4,
+                               rollout_trajectories=2 if smoke else 8)
+        ctl = ReplanController(
+            rp, ServiceLevelObjective(min_horizon_feasibility=0.25),
+            runner=runner, max_refresh_retries=2)
+        drv = ChaosHostDriver(sched, tracker, base, frame_s=1.0)
+        ok_everywhere = True
+        for t in range(frames):
+            now = drv.play_frame(t)
+            ctl.step(t, now=now)
+            ok_everywhere &= survivor_only(runner)
+        m = ctl.metrics()
+        fail_events = [e for e in runner.events if e["kind"] == "failure"]
+        rec = {
+            "kind": kind,
+            "runner_events": [dict(e) for e in runner.events],
+            "dead": sorted(set(sum((e["dead"] for e in fail_events), []))),
+            "precomputed_hits": sum(bool(e["precomputed"])
+                                    for e in fail_events),
+            "live_replans": sum(not e["precomputed"]
+                                for e in fail_events),
+            "survivor_only_plans": ok_everywhere,
+            "fully_recovered": m["n_unrecovered"] == 0
+            and ctl.mode == ctl.NOMINAL,
+            "mttr_frames": m["mttr_frames"],
+            "degraded_frames": m["degraded_frames"],
+            "generation_churn": m["generation_churn"],
+            "refresh_attempts": m["refresh_attempts"],
+            "replanner_retraces": rp.retraces,
+            "live_replan_cold_s": live_calls[0] if live_calls else None,
+        }
+        print(f"ladder      : {kind}: dead={rec['dead']} contingency="
+              f"{rec['precomputed_hits']} live={rec['live_replans']} "
+              f"recovered={rec['fully_recovered']} survivor_only="
+              f"{rec['survivor_only_plans']}")
+        return rec
+
+    # A: a single crash with the table armed -> precomputed hit
+    single = run_scenario("single_crash",
+                          FaultSchedule(uavs, frames, seed=1).crash(4, 2))
+    # B: a 3-UAV correlated burst detected in one scan -> no table entry
+    # (single-failure sweep) -> live re-solve over the survivors
+    burst = run_scenario(
+        "burst_3",
+        FaultSchedule(uavs, frames, seed=2).burst(4, 3, center=1,
+                                                  persistence=0.95))
+    # replay determinism: rebuilding the whole host stack from the same
+    # seeds must reproduce the runner's event log exactly
+    replay = run_scenario(
+        "burst_3",
+        FaultSchedule(uavs, frames, seed=2).burst(4, 3, center=1,
+                                                  persistence=0.95))
+    events_replay_identical = \
+        replay["runner_events"] == burst["runner_events"]
+    print(f"ladder      : event-log replay identical: "
+          f"{events_replay_identical}")
+
+    # recovery cost: table lookup vs a WARM live survivor re-solve
+    engine = ScenarioEngine(CH, devs, MC, plan_cache=cache)
+    table = ContingencyTable(engine, base, source=0)
+    t_lookup = []
+    for _ in range(repeats * 20):
+        t0 = time.perf_counter()
+        table.lookup([names[2]])
+        t_lookup.append(time.perf_counter() - t0)
+    live_calls: List[float] = []
+    replan = make_replan(live_calls)
+    survivors = [d for d in devs if d.name != names[2]]
+    replan(survivors)                                  # warm-up
+    for _ in range(repeats):
+        replan(survivors)
+    lookup_s = float(np.min(t_lookup))
+    live_warm_s = float(np.min(live_calls[1:]))
+    print(f"ladder      : contingency lookup {lookup_s * 1e6:.0f} us vs "
+          f"warm live replan {live_warm_s * 1e3:.1f} ms "
+          f"({live_warm_s / lookup_s:.0f}x)")
+    return {"single_crash": single, "burst_3": burst,
+            "events_replay_identical": events_replay_identical,
+            "contingency_lookup_s": lookup_s,
+            "live_replan_warm_s": live_warm_s,
+            "live_replan_over_lookup": live_warm_s / lookup_s}
+
+
+def run(batch: int = 64, uavs: int = 6, frames: int = 40,
+        repeats: int = 5, smoke: bool = False) -> Dict:
+    cache = PlanFnCache()
+    result: Dict = {
+        "benchmark": "chaos",
+        "backend": jax.default_backend(),
+        "config": {"batch": batch, "uavs": uavs, "frames": frames,
+                   "repeats": repeats, "smoke": smoke},
+    }
+    burst_frame = max(2, frames // 5)
+    burst_sizes = [3] if smoke else [1, 2, 3, 4]
+
+    dev = bench_device_side(uavs, frames, batch, burst_frame, burst_sizes,
+                            cache)
+    result["device_side"] = dev
+    ladder = bench_ladder(uavs, min(frames, 16), cache, repeats, smoke)
+    result["ladder"] = ladder
+
+    # zero retraces across the WHOLE chaos run: the first pass compiled
+    # every variant (each batch shape traces once); replaying the entire
+    # scenario set on the warm cache must trace NOTHING new
+    warm_traces = sum(cache.traces.values())
+    print("retraces    : second pass (warm cache, retrace audit)")
+    bench_device_side(uavs, frames, batch, burst_frame, burst_sizes, cache)
+    bench_ladder(uavs, min(frames, 16), cache, repeats, smoke)
+    retraces = sum(cache.traces.values()) - warm_traces
+    result["retraces"] = {"cache_keys": len(cache.traces),
+                         "first_pass_traces": warm_traces,
+                         "second_pass_new_traces": retraces}
+    print(f"retraces    : {len(cache.traces)} compiled variants, "
+          f"{warm_traces} first-pass traces, {retraces} on replay")
+
+    assert retraces == 0, "chaos run retraced a compiled plan"
+    assert dev["replay_bitwise_identical"], "chaos replay diverged"
+    for p in dev["points"]:
+        assert p["recovered_fraction"] > 0.9, \
+            f"burst size {p['burst_size']}: fleet failed to recover"
+    assert ladder["single_crash"]["precomputed_hits"] >= 1, \
+        "armed contingency table was not hit for a single crash"
+    assert ladder["burst_3"]["live_replans"] >= 1, \
+        "3-UAV burst should exceed the single-failure table"
+    for k in ("single_crash", "burst_3"):
+        assert ladder[k]["fully_recovered"], f"{k}: ladder never recovered"
+        assert ladder[k]["survivor_only_plans"], \
+            f"{k}: served a plan referencing a dead UAV"
+        assert ladder[k]["replanner_retraces"] == 0
+    if not smoke:
+        assert ladder["live_replan_over_lookup"] > 10.0, \
+            "table lookup should be far cheaper than a live re-solve"
+    print("PASS: full recovery through the ladder, survivor-only plans, "
+          "bitwise replay, 0 retraces")
+    return result
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--uavs", type=int, default=6)
+    ap.add_argument("--frames", type=int, default=40)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run; no cost-ratio assert")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the result dict to this path")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cfg = dict(batch=8, uavs=5, frames=16, repeats=2, smoke=True)
+    else:
+        cfg = dict(batch=args.batch, uavs=args.uavs, frames=args.frames,
+                   repeats=args.repeats)
+    result = run(**cfg)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,8 @@ Modes:
                      (one device call per point).
 * ``--bench``      — the perf pipeline: runs ``bench_placement``,
                      ``bench_scenario_engine``, ``bench_positions``,
-                     ``bench_rollout`` and ``bench_multisource`` at full
+                     ``bench_rollout``, ``bench_multisource`` and
+                     ``bench_chaos`` at full
                      size and writes the corresponding ``BENCH_*.json``
                      files (wall-clock, compile time, speedups vs the
                      NumPy oracle, the PR 1 tracer, the scalar P2 loop,
@@ -48,7 +49,7 @@ def run_figures(smoke: bool = False) -> None:
 
 
 def run_bench(out_dir: str, smoke: bool) -> None:
-    from benchmarks import (bench_multisource, bench_placement,
+    from benchmarks import (bench_chaos, bench_multisource, bench_placement,
                             bench_positions, bench_rollout,
                             bench_scenario_engine)
     os.makedirs(out_dir, exist_ok=True)
@@ -64,6 +65,8 @@ def run_bench(out_dir: str, smoke: bool) -> None:
         flags + ["--json", os.path.join(out_dir, "BENCH_rollout.json")])
     bench_multisource.main(
         flags + ["--json", os.path.join(out_dir, "BENCH_multisource.json")])
+    bench_chaos.main(
+        flags + ["--json", os.path.join(out_dir, "BENCH_chaos.json")])
     if smoke:
         # the paper-figure path rides the rollout now — exercise it in CI
         run_figures(smoke=True)

@@ -3,7 +3,15 @@ planner choosing the stage placement the way the paper places CNN layers
 on UAVs (here: transformer blocks on pipeline stage groups).
 
     PYTHONPATH=src python examples/serve_swarm.py
+
+``--chaos`` instead drives the LIVE recovery path: a one-crash
+``FaultSchedule`` feeds heartbeats into the health tracker while a
+``ReplanController`` watches the SLO — the crashed UAV must time out, the
+armed contingency table must answer, and the loop must end recovered.
+
+    PYTHONPATH=src python examples/serve_swarm.py --chaos
 """
+import argparse
 import time
 
 import jax
@@ -16,7 +24,7 @@ from repro.models import build_model
 from repro.runtime.serve_loop import ContinuousBatcher, Request
 
 
-def main() -> None:
+def main_lm() -> None:
     cfg = ArchConfig(
         name="serve-lm", family="dense", n_layers=4, d_model=256,
         d_ff=768, vocab_size=2048,
@@ -50,6 +58,81 @@ def main() -> None:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4]} -> "
               f"out[:8]={r.out[:8]}")
     assert len(done) == n_req
+
+
+def main_chaos() -> None:
+    """One-crash chaos schedule through the live serve-loop recovery
+    path: schedule -> heartbeats -> timeout -> contingency delegation."""
+    from repro.configs.lenet import LENET
+    from repro.core import (RadioChannel, RadioParams, RolloutSpec,
+                            cnn_cost, make_devices)
+    from repro.core.positions import hex_init
+    from repro.runtime.chaos import ChaosHostDriver, FaultSchedule
+    from repro.runtime.fault_tolerance import (FaultTolerantRunner,
+                                               HealthTracker)
+    from repro.runtime.fleet_rollout import FleetRollout
+    from repro.runtime.scenario_engine import (ContingencyTable, PlanFnCache,
+                                               ScenarioEngine,
+                                               ScenarioGenerator)
+    from repro.runtime.serve_loop import (PeriodicReplanner, ReplanController,
+                                          ServiceLevelObjective)
+
+    U, T = 5, 12
+    cache = PlanFnCache()
+    devs = make_devices(U, mem_frac=2e-4)        # forced chain split
+    mc = cnn_cost(LENET)
+    ch = RadioChannel(RadioParams())
+    base = hex_init(U, 40.0, jitter=0.5, seed=1)
+    names = [d.name for d in devs]
+
+    engine = ScenarioEngine(ch, devs, mc, plan_cache=cache)
+    table = ContingencyTable(engine, base, source=0)
+    tracker = HealthTracker(names, timeout_s=2.5, now=0.0)
+    runner = FaultTolerantRunner(devs, lambda d: {"n": len(d)}, ".",
+                                 contingency=table, health=tracker)
+    rollout = FleetRollout(ch, devs, mc, RolloutSpec(frames=4),
+                           plan_cache=cache, seed=0)
+    replanner = PeriodicReplanner(
+        engine, ScenarioGenerator(base, pos_sigma_m=1.0, seed=0),
+        period=4, n_scenarios=4, rollout=rollout, rollout_horizon=4,
+        rollout_trajectories=4)
+    controller = ReplanController(
+        replanner, ServiceLevelObjective(min_horizon_feasibility=0.25),
+        runner=runner)
+
+    schedule = FaultSchedule(U, T, seed=0).crash(frame=4, uav=2)
+    driver = ChaosHostDriver(schedule, tracker, base, frame_s=1.0)
+    print(f"chaos: {U} UAVs, crash of uav2 at frame 4, "
+          f"timeout {tracker.timeout}s")
+    for t in range(T):
+        now = driver.play_frame(t)
+        controller.step(t, now=now)
+    m = controller.metrics()
+    failures = [e for e in runner.events if e["kind"] == "failure"]
+    print(f"events: {[(e['kind'], e.get('dead')) for e in runner.events]}")
+    print(f"recovered: mode={controller.mode} unrecovered="
+          f"{m['n_unrecovered']} mttr={m['mttr_frames']:.1f} frames "
+          f"churn={m['generation_churn']} retraces={replanner.retraces}")
+    assert failures and failures[0]["precomputed"], \
+        "the armed contingency table must answer the crash"
+    assert [d.name for d in runner.state.devices] == \
+        [n for n in names if n != "uav2"]
+    assert controller.mode == controller.NOMINAL and \
+        m["n_unrecovered"] == 0, "loop must end recovered"
+    assert replanner.retraces == 0
+    print("chaos run recovered through the contingency path")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the one-crash chaos recovery demo instead "
+                         "of the LM serving demo")
+    args = ap.parse_args()
+    if args.chaos:
+        main_chaos()
+    else:
+        main_lm()
 
 
 if __name__ == "__main__":

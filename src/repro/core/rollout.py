@@ -350,7 +350,8 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
                     act_bits, input_bits, mem_cap, compute_cap, throughput,
                     order: Tuple[int, ...], spec: RolloutSpec,
                     p2: Optional[PositionSpec] = None,
-                    mesh=None):
+                    mesh=None, with_gain: bool = False,
+                    with_drain: bool = False):
     """Compile the (B, T) fleet rollout: ONE jit call, zero host crossings.
 
     With ``mesh`` (a 1-D ``jax.sharding.Mesh``, e.g. from
@@ -374,6 +375,19 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
         recov_u   [T, B, U]  recovery uniforms (< recovery_prob revives)
         forced    [T, B, U]  bool, True = externally forced dead this frame
         arrivals  [T, B, U]  drawn request arrivals per capturing UAV
+
+    plus, when the chaos flags are set, trailing per-frame fault streams
+    (the ``runtime.chaos.FaultSchedule`` compilation targets; each flag is
+    part of the compiled-rollout cache key, so the default no-chaos scan
+    stays byte-identical to the program every existing caller compiled):
+
+        gain      [T, B, U, U]  with_gain:  multiplicative link-gain
+                                factor per frame (1.0 = nominal; a faded
+                                link raises eq. (7) power thresholds and
+                                lowers eq. (5) rates in-trace)
+        drain     [T, B, U]     with_drain: extra battery drain (J) applied
+                                at the end of each frame — scripted battery
+                                drops; hits idle and active UAVs alike
 
     and returns per-frame stacks (leading T): positions, active, charge,
     arrival-weighted latency, total tightened power (masked to feasible
@@ -411,14 +425,17 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
     p_recover = jnp.float32(spec.recovery_prob)
 
     def rollout(pos0, charge0, alive0, waypoint, jitter, fail_u, recov_u,
-                forced, arrivals):
+                forced, arrivals, *chaos):
         on_trace()
         B = pos0.shape[0]
         rows = jnp.arange(B)
 
         def frame(carry, xs):
             pos, alive, charge = carry
-            jit_t, fail_t, rec_t, dead_t, arr_t = xs
+            jit_t, fail_t, rec_t, dead_t, arr_t = xs[:5]
+            extra = xs[5:]
+            gain_t = extra[0] if with_gain else None
+            drain_t = extra[-1] if with_drain else None
             # 1. mobility: bounded step toward the waypoint, plus jitter
             to_wp = waypoint - pos
             nrm = jnp.linalg.norm(to_wp, axis=-1, keepdims=True)
@@ -448,7 +465,7 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
             p2_links = None if links_const is None else \
                 jnp.broadcast_to(links_const, (B, U, U))
             (pos, power, rate, assign, lat_src, latency, load,
-             cap_ok) = solve(pos, n_eff, active, None, p2_links)
+             cap_ok) = solve(pos, n_eff, active, gain_t, p2_links)
             # 6. energy accounting + battery carry.  ``load`` is already
             # the arrival-weighted aggregate MACs; an infeasible frame is
             # not served, so it spends nothing beyond hover.
@@ -458,13 +475,17 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
             e_cmp = jnp.where(feasible[:, None], kappa * load, 0.0)
             e_tx = jnp.where(feasible[:, None], power * tx_time, 0.0)
             drain = jnp.where(active, e_cmp + e_tx + hover_e, 0.0)
+            if with_drain:
+                # scripted battery drops (chaos): charged whether or not
+                # the UAV served this frame — a physical energy loss
+                drain = drain + drain_t
             charge = jnp.maximum(charge - drain, 0.0)
             out = (pos, active, charge, latency,
                    jnp.where(feasible, power.sum(-1), 0.0), feasible,
                    cap_ok, assign, lat_src, n_eff, e_tx, e_cmp)
             return (pos, alive, charge), out
 
-        xs = (jitter, fail_u, recov_u, forced, arrivals)
+        xs = (jitter, fail_u, recov_u, forced, arrivals) + chaos
         _, outs = jax.lax.scan(frame, (pos0, alive0, charge0), xs)
         return outs
 
@@ -480,10 +501,12 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
     from repro.parallel.sharding import shard_map_compat
     axis = mesh.axis_names[0]
     b_spec, tb_spec = P(axis), P(None, axis)
+    n_chaos = int(with_gain) + int(with_drain)   # trailing [T, B, ...] streams
     sharded = shard_map_compat(
         rollout, mesh,
         in_specs=(b_spec, b_spec, b_spec, b_spec,
-                  tb_spec, tb_spec, tb_spec, tb_spec, tb_spec),
+                  tb_spec, tb_spec, tb_spec, tb_spec, tb_spec)
+        + (tb_spec,) * n_chaos,
         out_specs=tb_spec)
     return jax.jit(sharded)
 

@@ -43,11 +43,17 @@ class HealthTracker:
 
     def __init__(self, names: Sequence[str], timeout_s: float = 60.0,
                  straggler_factor: float = 1.5,
-                 battery_floor_j: float = 0.0):
+                 battery_floor_j: float = 0.0,
+                 now: Optional[float] = None):
         self.timeout = timeout_s
         self.factor = straggler_factor
         self.battery_floor = battery_floor_j
-        self.devices = {n: DeviceHealth(n) for n in names}
+        # registration counts as the first heartbeat: a device that NEVER
+        # reports must time out like one that stopped reporting, not sit
+        # immortal at last_heartbeat == 0.0
+        now = time.monotonic() if now is None else now
+        self.devices = {n: DeviceHealth(n, last_heartbeat=now)
+                        for n in names}
 
     def heartbeat(self, name: str, step_time: float,
                   now: Optional[float] = None) -> None:
@@ -76,7 +82,7 @@ class HealthTracker:
             if d.charge <= self.battery_floor:
                 d.alive = False
                 dead.append(d.name)
-            elif d.last_heartbeat and now - d.last_heartbeat > self.timeout:
+            elif now - d.last_heartbeat > self.timeout:
                 d.alive = False
                 dead.append(d.name)
             elif median and d.step_time_ema > self.factor * median:
@@ -106,16 +112,28 @@ class FaultTolerantRunner:
                  replan_fn: Callable[[Sequence[Device]], object],
                  ckpt_dir: str,
                  straggler_demote: float = 0.5,
-                 contingency: Optional[object] = None):
+                 contingency: Optional[object] = None,
+                 straggler_cooldown_s: float = 30.0,
+                 demote_floor: float = 0.1,
+                 health: Optional[HealthTracker] = None):
         self.state = ElasticPlanState(list(devices))
         self.replan_fn = replan_fn
         self.ckpt_dir = ckpt_dir
         self.demote = straggler_demote
+        # straggler hysteresis: a demoted device is off-limits for
+        # ``straggler_cooldown_s`` and never drops below ``demote_floor`` x
+        # its original throughput — without these, every scan of one slow
+        # device re-demotes it (throughput -> 0, a replan per tick)
+        self.straggler_cooldown = straggler_cooldown_s
+        self.demote_floor = demote_floor
+        self._demoted_at: Dict[str, float] = {}
+        self._base_throughput = {d.name: d.throughput for d in devices}
         # optional precomputed failure plans (scenario_engine.ContingencyTable
         # or anything with ``lookup(dead_names) -> plan | None``): delegation
         # becomes a table lookup instead of a re-solve at failure time
         self.contingency = contingency
-        self.health = HealthTracker([d.name for d in devices])
+        self.health = health if health is not None \
+            else HealthTracker([d.name for d in devices])
         self.state.plan = replan_fn(self.state.devices)
         self.events: List[Dict] = []
 
@@ -179,20 +197,47 @@ class FaultTolerantRunner:
         dead, _ = self.health.scan(now)
         return self.on_failure(dead) if dead else None
 
-    def on_straggler(self, slow_names: Sequence[str]) -> object:
-        """Demote straggler throughput and shift load away (re-plan)."""
+    def on_straggler(self, slow_names: Sequence[str],
+                     now: Optional[float] = None) -> Optional[object]:
+        """Demote straggler throughput and shift load away (re-plan).
+
+        Hysteresis: a device demoted within ``straggler_cooldown_s`` is
+        skipped (one demotion gets a chance to take effect before the
+        next), and throughput never drops below ``demote_floor`` x the
+        device's registration-time throughput.  When every reported
+        straggler is filtered out, NO replan happens and no event is
+        recorded — repeated scans of the same slow device demote once."""
+        now = time.monotonic() if now is None else now
+        eligible = set()
+        for d in self.state.devices:
+            if d.name not in set(slow_names):
+                continue
+            last = self._demoted_at.get(d.name)
+            if last is not None and now - last < self.straggler_cooldown:
+                continue
+            floor = self.demote_floor * self._base_throughput.get(
+                d.name, d.throughput)
+            if d.throughput <= floor:
+                continue
+            eligible.add(d.name)
+        if not eligible:
+            return None
         new_devs = []
         for d in self.state.devices:
-            if d.name in set(slow_names):
+            if d.name in eligible:
+                floor = self.demote_floor * self._base_throughput.get(
+                    d.name, d.throughput)
                 new_devs.append(Device(d.name, d.mem_cap, d.compute_cap,
-                                       d.throughput * self.demote))
+                                       max(d.throughput * self.demote,
+                                           floor)))
+                self._demoted_at[d.name] = now
             else:
                 new_devs.append(d)
         self.state.devices = new_devs
         self.state.plan = self.replan_fn(new_devs)
         self.contingency = None    # table assumed pre-demotion throughputs
         self.state.generation += 1
-        self.events.append({"kind": "straggler", "slow": list(slow_names),
+        self.events.append({"kind": "straggler", "slow": sorted(eligible),
                             "generation": self.state.generation})
         return self.state.plan
 
@@ -204,7 +249,7 @@ class FaultTolerantRunner:
         if dead:
             return self.on_failure(dead)
         if slow:
-            return self.on_straggler(slow)
+            return self.on_straggler(slow, now=now)
         return None
 
 

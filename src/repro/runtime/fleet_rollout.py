@@ -196,14 +196,18 @@ class FleetRollout(ScenarioEngine):
             return None
         return fleet_mesh(mesh if mesh is not None else devices)
 
-    def _rollout_fn(self, mesh):
+    def _rollout_fn(self, mesh, with_gain: bool = False,
+                    with_drain: bool = False):
         """The compiled rollout for ``mesh``, through the shared cache.
 
         The key carries ``mesh_signature(mesh)``: a single-device rollout
         (signature None) and every distinct mesh each get their own entry
-        and their own (exactly one) trace."""
-        rollout_key = ("rollout", mesh_signature(mesh), self.spec.key()) \
-            + self._cache_key()[1:]
+        and their own (exactly one) trace.  The chaos flags (per-frame
+        ``gain_scale`` fades / ``extra_drain`` battery drops threaded
+        through the scan) are part of the key too — a chaos run compiles
+        its own program and the default scan stays untouched."""
+        rollout_key = ("rollout", mesh_signature(mesh), with_gain,
+                       with_drain, self.spec.key()) + self._cache_key()[1:]
         if rollout_key not in self._cache_keys_used:
             self._cache_keys_used = self._cache_keys_used + (rollout_key,)
         return self.plan_cache.get(rollout_key, partial(
@@ -212,7 +216,7 @@ class FleetRollout(ScenarioEngine):
             input_bits=self.input_bits, mem_cap=self.mem_cap,
             compute_cap=self.compute_cap, throughput=self.throughput,
             order=self.order, spec=self.spec, p2=self.position_spec,
-            mesh=mesh))
+            mesh=mesh, with_gain=with_gain, with_drain=with_drain))
 
     # ------------------------------------------------------------------
     def _arrival_probs(self) -> np.ndarray:
@@ -234,6 +238,9 @@ class FleetRollout(ScenarioEngine):
             sources: Optional[np.ndarray] = None,
             arrivals: Optional[np.ndarray] = None,
             waypoints: Optional[np.ndarray] = None,
+            forced: Optional[np.ndarray] = None,
+            gain_scale: Optional[np.ndarray] = None,
+            extra_drain: Optional[np.ndarray] = None,
             mesh=None,
             devices: Union[None, int, Sequence] = None) -> RolloutTrace:
         """Roll B trajectories forward T frames in one device call.
@@ -241,6 +248,19 @@ class FleetRollout(ScenarioEngine):
         ``base_positions``: [U, 2] (tiled over trajectories) or [B, U, 2].
         ``forced_failures``: (frame, uav) pairs — the UAV is dead from that
         frame on in EVERY trajectory (the simulator's injection hook).
+        ``forced``: the same hook as a full [T, B, U] bool tensor (what
+        ``runtime.chaos.FaultSchedule`` compiles correlated bursts into —
+        per-trajectory, per-frame forced deaths; OR-combined with
+        ``forced_failures`` when both are given).
+        ``gain_scale``: optional [T, B, U, U] (or [T, U, U] / [U, U],
+        broadcast over missing axes) multiplicative link-gain factors —
+        scripted link fades, applied in-trace to the eq. (7) thresholds
+        and eq. (5) rates.  Must be positive.
+        ``extra_drain``: optional [T, B, U] (or [T, U]) extra battery
+        drain in joules per frame — scripted battery drops.  Must be
+        nonnegative.  Either chaos tensor selects a separately compiled
+        scan (its own ``PlanFnCache`` entry); the default rollout program
+        is unchanged.
         ``arrivals``: optional [T, B, U] per-UAV request counts (the full
         Section II-A stream; default: ``requests_per_frame`` total arrivals
         drawn multinomially over the swarm with ``spec.arrival_weights``).
@@ -284,10 +304,40 @@ class FleetRollout(ScenarioEngine):
                                 size=(T, B, U, 2)).astype(np.float32)
         fail_u = rng.random((T, B, U)).astype(np.float32)
         recov_u = rng.random((T, B, U)).astype(np.float32)
-        forced = np.zeros((T, B, U), dtype=bool)
+        if forced is not None:
+            forced = np.asarray(forced, dtype=bool)
+            if forced.shape != (T, B, U):
+                raise ValueError(f"forced must be [T={T}, B={B}, U={U}]; "
+                                 f"got {forced.shape}")
+            forced = forced.copy()
+        else:
+            forced = np.zeros((T, B, U), dtype=bool)
         for f, u in (forced_failures or ()):
             if 0 <= f < T:
                 forced[f:, :, u] = True
+        if gain_scale is not None:
+            gain_scale = np.asarray(gain_scale, np.float32)
+            if gain_scale.ndim == 2:
+                gain_scale = np.broadcast_to(gain_scale, (T, B, U, U))
+            elif gain_scale.ndim == 3:
+                gain_scale = np.broadcast_to(gain_scale[:, None], (T, B, U, U))
+            if gain_scale.shape != (T, B, U, U):
+                raise ValueError(f"gain_scale must broadcast to [T={T}, "
+                                 f"B={B}, U={U}, U]; got {gain_scale.shape}")
+            if (gain_scale <= 0).any():
+                raise ValueError("gain_scale factors must be positive")
+            gain_scale = np.ascontiguousarray(gain_scale)
+        if extra_drain is not None:
+            extra_drain = np.asarray(extra_drain, np.float32)
+            if extra_drain.ndim == 2:
+                extra_drain = np.broadcast_to(extra_drain[:, None],
+                                              (T, B, U))
+            if extra_drain.shape != (T, B, U):
+                raise ValueError(f"extra_drain must broadcast to [T={T}, "
+                                 f"B={B}, U={U}]; got {extra_drain.shape}")
+            if (extra_drain < 0).any():
+                raise ValueError("extra_drain must be nonnegative joules")
+            extra_drain = np.ascontiguousarray(extra_drain)
         if sources is not None and arrivals is not None:
             raise ValueError("pass either sources or arrivals, not both")
         if sources is not None:
@@ -330,13 +380,24 @@ class FleetRollout(ScenarioEngine):
             run_mesh = self._resolve_mesh(mesh, devices)
         else:
             run_mesh = self._default_mesh
-        rollout = self._rollout if run_mesh is self._default_mesh \
-            else self._rollout_fn(run_mesh)
+        with_gain = gain_scale is not None
+        with_drain = extra_drain is not None
+        rollout = self._rollout \
+            if (run_mesh is self._default_mesh
+                and not with_gain and not with_drain) \
+            else self._rollout_fn(run_mesh, with_gain, with_drain)
 
         valid = None
         inputs = [np.asarray(pos0, np.float32), charge0, alive0,
                   np.asarray(waypoints, np.float32), jitter, fail_u,
                   recov_u, forced, np.asarray(arrivals, np.float32)]
+        bdims = [0, 0, 0, 0, 1, 1, 1, 1, 1]
+        if with_gain:
+            inputs.append(gain_scale)
+            bdims.append(1)
+        if with_drain:
+            inputs.append(extra_drain)
+            bdims.append(1)
         if run_mesh is None:
             inputs = [jnp.asarray(x) for x in inputs]
         else:
@@ -352,14 +413,13 @@ class FleetRollout(ScenarioEngine):
                 inputs = [
                     np.pad(x, [(0, pad) if d == bdim else (0, 0)
                                for d in range(x.ndim)], mode="edge")
-                    for x, bdim in zip(inputs, (0, 0, 0, 0, 1, 1, 1, 1, 1))]
+                    for x, bdim in zip(inputs, bdims)]
                 valid = np.arange(Bpad) < B
             axis = run_mesh.axis_names[0]
             b_sh = NamedSharding(run_mesh, P(axis))
             tb_sh = NamedSharding(run_mesh, P(None, axis))
-            inputs = [jax.device_put(x, sh) for x, sh in zip(
-                inputs, (b_sh, b_sh, b_sh, b_sh,
-                         tb_sh, tb_sh, tb_sh, tb_sh, tb_sh))]
+            inputs = [jax.device_put(x, b_sh if bdim == 0 else tb_sh)
+                      for x, bdim in zip(inputs, bdims)]
 
         (pos, active, charge, latency, power, feasible, cap_ok, assign,
          lat_src, n_eff, e_tx, e_cmp) = rollout(*inputs)

@@ -1,0 +1,517 @@
+"""Chaos harness + SLO-driven degraded-mode replanning (ISSUE 7).
+
+The acceptance contract:
+
+* one seeded ``FaultSchedule`` compiles into BOTH the rollout's in-trace
+  injection tensors and a host-side event stream, and replays bitwise —
+  identical ``RolloutTrace`` stats and identical
+  ``FaultTolerantRunner.events`` from the same seed;
+* the ``ReplanController`` ladder is bounded: early refresh under
+  exponential backoff with a retry cap, then degraded-mode admission
+  shedding — and a host-detected death recovers through contingency
+  lookup (armed) or live replan (burst beyond the table), never
+  installing a plan that addresses a dead device;
+* satellites: a never-heartbeated device times out, straggler demotion
+  has hysteresis (cooldown + floor), and a refresh never adopts positions
+  from an infeasible scenario-0 plan.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.lenet import LENET
+from repro.core import (RadioChannel, RadioParams, RolloutSpec, PositionSpec,
+                        cnn_cost, make_devices)
+from repro.core.placement import Device
+from repro.core.positions import hex_init
+from repro.runtime.chaos import ChaosHostDriver, FaultSchedule
+from repro.runtime.fault_tolerance import FaultTolerantRunner, HealthTracker
+from repro.runtime.fleet_rollout import FleetRollout
+from repro.runtime.scenario_engine import (ContingencyTable, PlanFnCache,
+                                           ScenarioBatch, ScenarioEngine,
+                                           ScenarioGenerator)
+from repro.runtime.serve_loop import (PeriodicReplanner, ReplanController,
+                                      ServiceLevelObjective)
+
+PARAMS = RadioParams()
+CH = RadioChannel(PARAMS)
+MC = cnn_cost(LENET)
+SPLIT = 2e-4          # mem_frac forcing LeNet to span >= 2 UAVs
+
+
+def line_positions(u, spacing=100.0):
+    return np.stack([np.arange(u) * spacing, np.zeros(u)], -1)
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule compilation
+# ---------------------------------------------------------------------------
+
+
+class TestFaultSchedule:
+    def test_rollout_inputs_shapes_and_gating(self):
+        """forced is always emitted; gain/drain tensors only when the
+        schedule contains the corresponding events (each flag selects a
+        separately compiled scan, so absence matters)."""
+        pos = line_positions(4)
+        bare = FaultSchedule(4, 6, seed=0).crash(1, 2)
+        inp = bare.rollout_inputs(3, pos)
+        assert set(inp) == {"forced"}
+        assert inp["forced"].shape == (6, 3, 4)
+        assert inp["forced"].dtype == bool
+
+        full = (FaultSchedule(4, 6, seed=0).crash(1, 2)
+                .link_fade(0, db=-10.0, uav=1, frames=2)
+                .battery_drop(2, 3, 50.0))
+        inp = full.rollout_inputs(2, pos)
+        assert inp["gain_scale"].shape == (6, 2, 4, 4)
+        assert inp["extra_drain"].shape == (6, 2, 4)
+        # -10 dB both directions on uav1's links, neutral elsewhere
+        np.testing.assert_allclose(inp["gain_scale"][0, 0, 1, 2], 0.1,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(inp["gain_scale"][0, 0, 2, 1], 0.1,
+                                   rtol=1e-6)
+        assert inp["gain_scale"][0, 0, 2, 3] == 1.0
+        assert inp["gain_scale"][3, 0, 1, 2] == 1.0      # fade expired
+        assert inp["extra_drain"][2, 1, 3] == 50.0
+
+    def test_validation(self):
+        s = FaultSchedule(4, 8)
+        with pytest.raises(ValueError):
+            s.crash(8, 0)                       # frame out of range
+        with pytest.raises(ValueError):
+            s.crash(0, 4)                       # uav out of range
+        with pytest.raises(ValueError):
+            s.burst(0, 5)                       # burst bigger than swarm
+        with pytest.raises(ValueError):
+            s.burst(0, 2, persistence=1.0)      # must terminate
+        with pytest.raises(ValueError):
+            s.link_fade(0, db=-3.0)             # neither uav nor pair
+        with pytest.raises(ValueError):
+            s.link_fade(0, db=-3.0, uav=1, pair=(0, 1))
+        with pytest.raises(ValueError):
+            s.battery_drop(0, 1, -5.0)
+        with pytest.raises(ValueError):
+            s.straggler(0, 1, factor=0.5)
+
+    def test_burst_is_spatially_clustered(self):
+        """A burst takes out the NEIGHBORHOOD of its center: on a line
+        fleet, center 0 with size 3 kills {0, 1, 2}, never a far UAV."""
+        pos = line_positions(6)
+        s = FaultSchedule(6, 10, seed=0).burst(2, 3, center=0)
+        (members,) = s.burst_members(pos)
+        assert set(members) == {0, 1, 2}
+        forced = s.rollout_inputs(4, pos)["forced"]
+        assert forced[2, :, list(members)].all()         # all die at once
+        assert not forced[:, :, 5].any()                 # far UAV untouched
+        assert not forced[:2].any()                      # nothing early
+
+    def test_burst_is_markov_persistent_per_trajectory(self):
+        """Holding times are geometric draws, independent per trajectory:
+        different trajectories release members at different frames, and
+        higher persistence holds strictly longer in expectation."""
+        pos = line_positions(5)
+        B = 64
+
+        def mean_hold(p):
+            s = FaultSchedule(5, 30, seed=3).burst(0, 2, center=1,
+                                                   persistence=p)
+            forced = s.rollout_inputs(B, pos)
+            return forced["forced"].sum(0).mean(), forced["forced"]
+
+        lo, f_lo = mean_hold(0.2)
+        hi, f_hi = mean_hold(0.9)
+        assert hi > lo
+        # per-trajectory variation: not every trajectory holds equally
+        holds = f_hi[:, :, 1].sum(0)
+        assert len(set(int(h) for h in holds)) > 1
+
+    def test_bernoulli_and_replay_determinism(self):
+        pos = line_positions(4)
+
+        def compile_once():
+            return (FaultSchedule(4, 12, seed=9)
+                    .bernoulli(0.2, start=2, stop=10)
+                    .burst(4, 2, persistence=0.5)
+                    .rollout_inputs(8, pos))
+
+        a, b = compile_once(), compile_once()
+        assert np.array_equal(a["forced"], b["forced"])
+        # the stochastic events actually fired, and stay in their window
+        assert a["forced"][2:10].any()
+        assert not a["forced"][:2].any()
+
+    def test_host_timeline_matches_rollout_inputs(self):
+        """host_timeline and rollout_inputs are two views of the SAME
+        compiled scenario: a frame's down set equals the forced row."""
+        pos = line_positions(5)
+        s = (FaultSchedule(5, 10, seed=1).burst(3, 2, center=4,
+                                                persistence=0.6)
+             .silence(5, 0).straggler(2, 1, factor=3.0))
+        forced = s.rollout_inputs(4, pos)["forced"]
+        tl = s.host_timeline(pos, trajectory=2, n_trajectories=4)
+        for t in range(10):
+            assert set(tl[t].down) == set(np.flatnonzero(forced[t, 2]))
+        assert 0 in tl[5].silent and 0 not in tl[4].silent
+        assert tl[2].straggler_factor == {1: 3.0}
+
+
+# ---------------------------------------------------------------------------
+# Device-side chaos: the injected tensors steer the compiled rollout
+# ---------------------------------------------------------------------------
+
+
+class TestChaosRollout:
+    def _rollout(self, u, frames, cache, battery_j=float("inf"), seed=0):
+        spec = RolloutSpec(frames=frames, battery_j=battery_j)
+        return FleetRollout(CH, make_devices(u, mem_frac=SPLIT), MC, spec,
+                            plan_cache=cache, seed=seed)
+
+    def test_neutral_gain_matches_no_gain_bitwise(self):
+        """gain_scale = 1 runs a DIFFERENT compiled program (the with_gain
+        variant) but must reproduce the default run bitwise."""
+        cache = PlanFnCache()
+        pos = hex_init(4, 40.0, jitter=0.5, seed=1)
+        T, B = 3, 2
+        src = np.zeros((T, B), np.int64)
+        plain = self._rollout(4, T, cache).run(pos, n_trajectories=B,
+                                               sources=src)
+        neutral = self._rollout(4, T, cache).run(
+            pos, n_trajectories=B, sources=src,
+            gain_scale=np.ones((T, B, 4, 4), np.float32))
+        assert np.array_equal(np.asarray(plain.latency),
+                              np.asarray(neutral.latency))
+        assert np.array_equal(np.asarray(plain.total_power),
+                              np.asarray(neutral.total_power))
+
+    def test_blackout_fade_breaks_the_split_chain(self):
+        """On a split-forced fleet the source MUST ship activations over
+        links; fading every link of the pinned source to nothing makes
+        exactly the faded frames infeasible."""
+        cache = PlanFnCache()
+        pos = hex_init(4, 40.0, jitter=0.5, seed=1)
+        T, B = 4, 2
+        src = np.zeros((T, B), np.int64)
+        sched = FaultSchedule(4, T, seed=0).link_fade(1, db=-200.0, uav=0,
+                                                      frames=2)
+        trace = self._rollout(4, T, cache).run(
+            pos, n_trajectories=B, sources=src,
+            **sched.rollout_inputs(B, pos))
+        lat = np.asarray(trace.latency)
+        assert np.isfinite(lat[:, 0]).all()              # before the fade
+        assert np.isinf(lat[:, 1:3]).all()               # blackout window
+        assert np.isfinite(lat[:, 3]).all()              # fade expired
+
+    def test_battery_drop_excludes_uav_next_frame(self):
+        cache = PlanFnCache()
+        pos = hex_init(4, 40.0, jitter=0.5, seed=1)
+        T, B = 4, 2
+        sched = FaultSchedule(4, T, seed=0).battery_drop(1, 2, 1e9)
+        trace = self._rollout(4, T, cache, battery_j=5e3).run(
+            pos, n_trajectories=B, **sched.rollout_inputs(B, pos))
+        assert trace.active[:, 1, 2].all()          # drained DURING frame 1
+        assert np.asarray(trace.charge)[:, 1, 2].max() == 0.0
+        assert not trace.active[:, 2:, 2].any()     # excluded from frame 2
+
+    def test_same_seed_bitwise_identical_trace(self):
+        """Same FaultSchedule seed + same rollout seed => bitwise-identical
+        RolloutTrace stats from FRESH engine instances."""
+        cache = PlanFnCache()
+        pos = hex_init(5, 40.0, jitter=0.5, seed=1)
+        T, B = 6, 4
+        sched = (FaultSchedule(5, T, seed=5)
+                 .burst(2, 3, center=1, persistence=0.6)
+                 .link_fade(1, db=-6.0, uav=4, frames=3))
+
+        def run():
+            return self._rollout(5, T, cache, seed=11).run(
+                pos, n_trajectories=B, **sched.rollout_inputs(B, pos))
+
+        a, b = run(), run()
+        for f in ("latency", "total_power", "active", "charge", "assign"):
+            assert np.array_equal(np.asarray(getattr(a, f)),
+                                  np.asarray(getattr(b, f))), f
+
+
+# ---------------------------------------------------------------------------
+# Satellites: tracker registration, straggler hysteresis, adoption guard
+# ---------------------------------------------------------------------------
+
+
+class TestHealthTrackerRegistration:
+    def test_silent_from_birth_times_out(self):
+        """Regression: a device that NEVER heartbeats used to sit immortal
+        at last_heartbeat == 0.0; registration now stamps the clock."""
+        ht = HealthTracker(["a", "b"], timeout_s=10.0, now=100.0)
+        ht.heartbeat("a", 0.1, now=105.0)
+        dead, _ = ht.scan(now=112.0)
+        assert dead == ["b"]                 # b never spoke: dead
+        assert ht.devices["a"].alive
+
+    def test_registration_stamp_not_instantly_dead(self):
+        ht = HealthTracker(["a"], timeout_s=10.0, now=100.0)
+        dead, _ = ht.scan(now=105.0)
+        assert dead == []
+
+
+class TestStragglerHysteresis:
+    def _runner(self, **kw):
+        devs = [Device(f"d{i}", 1e9, 1e12, 5e8) for i in range(4)]
+        calls = []
+        runner = FaultTolerantRunner(devs, lambda d: calls.append(len(d))
+                                     or {"n": len(d)}, ".", **kw)
+        return runner, calls
+
+    def test_repeated_scans_demote_once(self):
+        """One persistently slow device across many scans: exactly ONE
+        demotion + replan inside the cooldown window."""
+        runner, calls = self._runner(straggler_cooldown_s=30.0)
+        init_calls = len(calls)
+        for t in range(10):
+            for d in runner.health.devices.values():
+                runner.health.heartbeat(
+                    d.name, 2.0 if d.name == "d1" else 0.1, now=float(t))
+            runner.tick(now=float(t))
+        stragglers = [e for e in runner.events if e["kind"] == "straggler"]
+        assert len(stragglers) == 1
+        assert len(calls) - init_calls == 1
+        assert runner.state.generation == 1
+        d1 = [d for d in runner.state.devices if d.name == "d1"][0]
+        assert d1.throughput == pytest.approx(5e8 * runner.demote)
+
+    def test_cooldown_expiry_allows_another_demotion(self):
+        runner, _ = self._runner(straggler_cooldown_s=5.0)
+        runner.on_straggler(["d1"], now=0.0)
+        assert runner.on_straggler(["d1"], now=1.0) is None   # in cooldown
+        assert runner.on_straggler(["d1"], now=6.0) is not None
+        assert runner.state.generation == 2
+
+    def test_demotion_floor_is_never_crossed(self):
+        runner, _ = self._runner(straggler_cooldown_s=0.0, demote_floor=0.2)
+        for k in range(20):
+            runner.on_straggler(["d1"], now=float(k))
+        d1 = [d for d in runner.state.devices if d.name == "d1"][0]
+        assert d1.throughput == pytest.approx(0.2 * 5e8)
+        # at the floor: further scans are no-ops, not replans
+        assert runner.on_straggler(["d1"], now=99.0) is None
+
+
+class TestInfeasibleAdoptionGuard:
+    def test_refresh_keeps_measured_positions_when_infeasible(self):
+        """A fused-P2 refresh whose scenario-0 plan is INFEASIBLE must not
+        fly the fleet to the garbage P2 positions: the measured nominal
+        state stays, and the event is flagged."""
+        cache = PlanFnCache()
+        # mem_frac 4e-7: ~429 bytes cap, the biggest LeNet layer can never
+        # be placed — every plan is infeasible no matter where P2 flies
+        devs = make_devices(4, mem_frac=4e-7)
+        engine = ScenarioEngine(CH, devs, MC, plan_cache=cache,
+                                position_spec=PositionSpec(steps=20))
+        base = hex_init(4, 40.0, jitter=0.5, seed=1)
+        gen = ScenarioGenerator(base, pos_sigma_m=1.0, seed=0)
+        rp = PeriodicReplanner(engine, gen, period=2, n_scenarios=2)
+        assert rp.tick(0)
+        assert not np.isfinite(rp.nominal_latency)
+        np.testing.assert_array_equal(gen.base_positions, base)
+        assert rp.infeasible_refreshes == 1
+
+    def test_feasible_refresh_still_adopts(self):
+        cache = PlanFnCache()
+        devs = make_devices(4)
+        engine = ScenarioEngine(CH, devs, MC, plan_cache=cache,
+                                position_spec=PositionSpec(steps=30))
+        base = hex_init(4, 40.0, jitter=0.5, seed=1)
+        gen = ScenarioGenerator(base, pos_sigma_m=1.0, seed=0)
+        rp = PeriodicReplanner(engine, gen, period=2, n_scenarios=2)
+        assert rp.tick(0)
+        assert np.isfinite(rp.nominal_latency)
+        assert not np.array_equal(gen.base_positions, base)   # adopted P2
+        assert rp.infeasible_refreshes == 0
+
+
+# ---------------------------------------------------------------------------
+# ReplanController: the bounded degradation ladder
+# ---------------------------------------------------------------------------
+
+
+class StubReplanner:
+    """Duck-typed PeriodicReplanner with scriptable health — the ladder
+    logic (backoff, retry cap, shedding, event metrics) tested without a
+    compile in sight."""
+
+    def __init__(self):
+        self.healthy = True
+        self.plan = type("P", (), {"latency": np.array([1.0]),
+                                   "positions": None})()
+        self.rollout = object()
+        self.horizon = object()
+        self.refreshes = 0
+        self.infeasible_refreshes = 0
+        self.forced_at = []
+
+    @property
+    def nominal_latency(self):
+        return 1.0
+
+    @property
+    def horizon_feasibility(self):
+        return 1.0 if self.healthy else 0.0
+
+    def horizon_latency(self, q):
+        return 0.5
+
+    def tick(self, frame, positions=None, force=False):
+        if force:
+            self.forced_at.append(frame)
+        self.refreshes += 1
+        return True
+
+
+class TestReplanControllerLadder:
+    def test_backoff_retry_cap_then_degraded_shedding(self):
+        """A persistent breach triggers refreshes at exponentially backed
+        off frames, stops at the retry cap, and drops to degraded-mode
+        admission shedding — NO refresh storm."""
+        rp = StubReplanner()
+        ctl = ReplanController(rp, max_refresh_retries=3,
+                               base_backoff_frames=1, max_backoff_frames=8,
+                               shed_fraction=0.5)
+        rp.healthy = False
+        for frame in range(8):
+            ctl.step(frame)
+        # retries at 0, then +1 backoff -> 1, then +2 -> 3; cap after 3
+        assert rp.forced_at == [0, 1, 3]
+        assert ctl.mode == ctl.DEGRADED
+        assert ctl.shedding
+        admitted = [ctl.admit() for _ in range(8)]
+        assert sum(admitted) == 4                      # sheds half
+
+    def test_recovery_closes_event_with_metrics(self):
+        rp = StubReplanner()
+        ctl = ReplanController(rp, max_refresh_retries=2,
+                               base_backoff_frames=4)
+        rp.healthy = False
+        for frame in range(5):
+            ctl.step(frame)
+        rp.healthy = True
+        ctl.step(5)
+        assert ctl.mode == ctl.NOMINAL
+        assert not ctl.shedding
+        m = ctl.metrics()
+        assert m["n_events"] == 1 and m["n_unrecovered"] == 0
+        ev = m["events"][0]
+        assert ev["start_frame"] == 0 and ev["end_frame"] == 5
+        assert ev["frames_to_recover"] == 5
+        assert m["mttr_frames"] == 5.0
+        assert ev["degraded_frames"] == 5
+        assert m["degraded_frame_fraction"] == pytest.approx(5 / 6)
+        # after recovery, admissions flow and backoff is reset
+        assert all(ctl.admit() for _ in range(4))
+        rp.healthy = False
+        ctl.step(6)
+        assert rp.forced_at[-1] == 6                   # retries re-armed
+
+    def test_healthy_loop_never_forces(self):
+        rp = StubReplanner()
+        ctl = ReplanController(rp)
+        for frame in range(10):
+            assert ctl.step(frame) == ctl.NOMINAL
+        assert rp.forced_at == []
+        assert ctl.metrics()["n_events"] == 0
+        assert ctl.serving_plan is rp.plan
+
+    def test_degraded_serves_last_known_good(self):
+        rp = StubReplanner()
+        ctl = ReplanController(rp, max_refresh_retries=0)
+        ctl.step(0)
+        good = rp.plan
+        rp.healthy = False
+        rp.plan = type("P", (), {"latency": np.array([np.inf]),
+                                 "positions": None})()
+        ctl.step(1)
+        assert ctl.serving_plan is good
+
+
+class TestReplanControllerIntegration:
+    """The live recovery path on the real engine: one seeded scenario
+    exercises tracker timeout -> runner delegation -> controller event."""
+
+    def _stack(self, uavs, frames, cache, replan_fn=None):
+        devs = make_devices(uavs, mem_frac=SPLIT)
+        base = hex_init(uavs, 40.0, jitter=0.5, seed=1)
+        names = [d.name for d in devs]
+        engine = ScenarioEngine(CH, devs, MC, plan_cache=cache)
+        table = ContingencyTable(engine, base, source=0)
+        tracker = HealthTracker(names, timeout_s=2.5, now=0.0)
+        if replan_fn is None:
+            replan_fn = lambda d: {"n": len(d)}              # noqa: E731
+        runner = FaultTolerantRunner(devs, replan_fn, ".",
+                                     contingency=table, health=tracker)
+        ro = FleetRollout(CH, devs, MC, RolloutSpec(frames=3),
+                          plan_cache=cache, seed=0)
+        rp = PeriodicReplanner(
+            engine, ScenarioGenerator(base, pos_sigma_m=1.0, seed=0),
+            period=4, n_scenarios=2, rollout=ro, rollout_horizon=3,
+            rollout_trajectories=2)
+        ctl = ReplanController(
+            rp, ServiceLevelObjective(min_horizon_feasibility=0.25),
+            runner=runner)
+        return base, tracker, runner, rp, ctl
+
+    def test_single_crash_recovers_from_contingency(self):
+        cache = PlanFnCache()
+        U, T = 4, 10
+        base, tracker, runner, rp, ctl = self._stack(U, T, cache)
+        sched = FaultSchedule(U, T, seed=0).crash(3, 2)
+        drv = ChaosHostDriver(sched, tracker, base, frame_s=1.0)
+        for t in range(T):
+            ctl.step(t, now=drv.play_frame(t))
+        fails = [e for e in runner.events if e["kind"] == "failure"]
+        assert fails and fails[0]["dead"] == ["uav2"]
+        assert fails[0]["precomputed"]                  # table answered
+        assert max(runner.state.plan.assign) < len(runner.state.devices)
+        assert ctl.mode == ctl.NOMINAL
+        assert ctl.metrics()["n_unrecovered"] == 0
+        assert rp.retraces == 0
+
+    def test_burst_falls_through_to_live_replan(self):
+        """A 3-UAV burst lands in ONE scan: beyond the single-failure
+        table, so delegation is a live re-solve over the survivors — and
+        the installed plan never references a dead device."""
+        cache = PlanFnCache()
+        U, T = 5, 10
+        seen = []
+
+        def replan(survivors):
+            seen.append([d.name for d in survivors])
+            return {"devices": [d.name for d in survivors]}
+
+        base, tracker, runner, rp, ctl = self._stack(U, T, cache,
+                                                     replan_fn=replan)
+        sched = FaultSchedule(U, T, seed=2).burst(3, 3, center=1,
+                                                  persistence=0.95)
+        drv = ChaosHostDriver(sched, tracker, base, frame_s=1.0)
+        for t in range(T):
+            ctl.step(t, now=drv.play_frame(t))
+        fails = [e for e in runner.events if e["kind"] == "failure"]
+        assert fails and len(fails[0]["dead"]) == 3
+        assert not fails[0]["precomputed"]              # live re-solve
+        dead = set(fails[0]["dead"])
+        assert set(runner.state.plan["devices"]).isdisjoint(dead)
+        assert ctl.metrics()["n_unrecovered"] == 0
+
+    def test_same_seed_identical_runner_events(self):
+        """Chaos replay determinism on the HOST side: rebuilding the whole
+        stack from the same seeds reproduces the event log exactly."""
+        cache = PlanFnCache()
+        U, T = 4, 10
+
+        def run_once():
+            base, tracker, runner, rp, ctl = self._stack(U, T, cache)
+            sched = FaultSchedule(U, T, seed=4).burst(2, 2, center=0,
+                                                      persistence=0.9)
+            drv = ChaosHostDriver(sched, tracker, base, frame_s=1.0)
+            for t in range(T):
+                ctl.step(t, now=drv.play_frame(t))
+            return runner.events
+
+        assert run_once() == run_once()

@@ -378,6 +378,74 @@ class TestShardInvarianceProperties:
                     assert abs(a - c) <= 1e-6 * max(1.0, abs(a))
 
 
+class TestRecoveryProperties:
+    """Delegation safety (ISSUE 7): recovery ALWAYS lands on a plan whose
+    assignment only addresses surviving devices — whether it came from the
+    precomputed contingency table (single failure, survivor-normalized) or
+    a live re-solve over the shrunk fleet.
+
+    The engine shapes are cached at class scope: each survivor count
+    compiles once across all hypothesis examples.
+    """
+
+    U = 5
+    _cache = None
+
+    @classmethod
+    def cache(cls):
+        if cls._cache is None:
+            from repro.runtime.scenario_engine import PlanFnCache
+            cls._cache = PlanFnCache()
+        return cls._cache
+
+    @given(st.integers(0, 2 ** 31),
+           st.lists(st.integers(1, 2), min_size=1, max_size=3))
+    @settings(max_examples=10, deadline=None)
+    def test_recovery_addresses_only_survivors(self, seed, kill_sizes):
+        from repro.configs.lenet import LENET
+        from repro.core import cnn_cost
+        from repro.core.swarm import make_devices
+        from repro.runtime.fault_tolerance import FaultTolerantRunner
+        from repro.runtime.scenario_engine import (ContingencyPlan,
+                                                   ContingencyTable,
+                                                   ScenarioBatch,
+                                                   ScenarioEngine)
+        cache = self.cache()
+        ch = RadioChannel()
+        mc = cnn_cost(LENET)
+        devs = make_devices(self.U)
+        base = hex_init(self.U, 40.0, jitter=0.5, seed=1)
+        idx_of = {d.name: i for i, d in enumerate(devs)}
+
+        def replan(survivors):
+            eng = ScenarioEngine(ch, list(survivors), mc, plan_cache=cache)
+            idx = [idx_of[d.name] for d in survivors]
+            sb = ScenarioBatch(positions=base[idx][None],
+                               source=np.zeros(1, np.int64))
+            return eng.plan_batch(sb)
+
+        engine = ScenarioEngine(ch, devs, mc, plan_cache=cache)
+        table = ContingencyTable(engine, base, source=0)
+        runner = FaultTolerantRunner(devs, replan, ".", contingency=table)
+        rng = np.random.default_rng(seed)
+        for size in kill_sizes:
+            alive = [d.name for d in runner.state.devices]
+            if len(alive) - size < 2:
+                break
+            dead = [str(n) for n in rng.choice(alive, size=size,
+                                               replace=False)]
+            plan = runner.on_failure(dead)
+            n = len(runner.state.devices)
+            if isinstance(plan, ContingencyPlan):
+                # precomputed: already normalized to survivor index space
+                assert plan.dead_index < 0
+                assert max(plan.assign) < n
+            else:
+                used = set(int(x) for x in np.asarray(plan.assign).ravel()
+                           if x >= 0)
+                assert used <= set(range(n))
+
+
 class TestCheckpointProperties:
     @given(st.lists(st.integers(1, 6), min_size=1, max_size=3),
            st.integers(0, 2 ** 31))
