@@ -8,8 +8,8 @@ Modes:
                      (one device call per point).
 * ``--bench``      — the perf pipeline: runs ``bench_placement``,
                      ``bench_scenario_engine``, ``bench_positions``,
-                     ``bench_rollout``, ``bench_multisource`` and
-                     ``bench_chaos`` at full
+                     ``bench_rollout``, ``bench_multisource``,
+                     ``bench_chaos`` and ``bench_gateway`` at full
                      size and writes the corresponding ``BENCH_*.json``
                      files (wall-clock, compile time, speedups vs the
                      NumPy oracle, the PR 1 tracer, the scalar P2 loop,
@@ -49,8 +49,8 @@ def run_figures(smoke: bool = False) -> None:
 
 
 def run_bench(out_dir: str, smoke: bool) -> None:
-    from benchmarks import (bench_chaos, bench_multisource, bench_placement,
-                            bench_positions, bench_rollout,
+    from benchmarks import (bench_chaos, bench_gateway, bench_multisource,
+                            bench_placement, bench_positions, bench_rollout,
                             bench_scenario_engine)
     os.makedirs(out_dir, exist_ok=True)
     flags = ["--smoke"] if smoke else []
@@ -67,6 +67,8 @@ def run_bench(out_dir: str, smoke: bool) -> None:
         flags + ["--json", os.path.join(out_dir, "BENCH_multisource.json")])
     bench_chaos.main(
         flags + ["--json", os.path.join(out_dir, "BENCH_chaos.json")])
+    bench_gateway.main(
+        flags + ["--json", os.path.join(out_dir, "BENCH_gateway.json")])
     if smoke:
         # the paper-figure path rides the rollout now — exercise it in CI
         run_figures(smoke=True)

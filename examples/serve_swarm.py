@@ -10,6 +10,13 @@ on UAVs (here: transformer blocks on pipeline stage groups).
 armed contingency table must answer, and the loop must end recovered.
 
     PYTHONPATH=src python examples/serve_swarm.py --chaos
+
+``--stream`` drives the deadline-aware streaming gateway: an open-loop
+arrival stream (plus an injected flood and a device stall past the retry
+cap) flows through bounded admission into the fused rollout — the demo
+must shed deterministically, degrade, and recover.
+
+    PYTHONPATH=src python examples/serve_swarm.py --stream
 """
 import argparse
 import time
@@ -123,14 +130,79 @@ def main_chaos() -> None:
     print("chaos run recovered through the contingency path")
 
 
+def main_stream() -> None:
+    """Live streaming demo: an open-loop arrival stream floods the
+    deadline-aware gateway while an injected device stall burns through
+    the retry cap — the gateway must shed deterministically, fall into
+    degraded admission, then recover on the next healthy window."""
+    from repro.configs.lenet import LENET
+    from repro.core import (RadioChannel, RadioParams, RolloutSpec,
+                            cnn_cost, make_devices)
+    from repro.core.positions import hex_init
+    from repro.runtime.chaos import FaultSchedule
+    from repro.runtime.fleet_rollout import FleetRollout
+    from repro.runtime.gateway import (GatewayConfig, LoadGenerator,
+                                       StreamingGateway)
+    from repro.runtime.scenario_engine import PlanFnCache
+
+    U, T, W = 4, 4, 5                     # UAVs, frames/window, windows
+    cache = PlanFnCache()
+    devs = make_devices(U, mem_frac=2e-4)        # forced chain split
+    base = hex_init(U, 40.0, jitter=0.5, seed=1)
+    rollout = FleetRollout(
+        RadioChannel(RadioParams()), devs, cnn_cost(LENET),
+        RolloutSpec(frames=T, requests_per_frame=3, recovery_prob=0.5),
+        plan_cache=cache, seed=0)
+
+    # window 1 stalls past the retry cap (-> degraded admission); windows
+    # 2-3 offer a 3x arrival flood the bounded queue must shed through
+    schedule = (FaultSchedule(U, T * W, seed=0)
+                .device_stall(T, attempts=3)
+                .arrival_flood(2 * T, 3.0, frames=2 * T))
+    gw = StreamingGateway(
+        rollout, base,
+        GatewayConfig(window_frames=T, frame_s=1.0, queue_capacity=16,
+                      frame_capacity=3, retry_base_backoff_s=0.001,
+                      max_attempts=2),
+        schedule=schedule, seed=0)
+    gen = LoadGenerator(U, kind="poisson", rate=2.0, deadline_s=6.0,
+                        seed=3, priorities=(0, 1),
+                        priority_weights=(0.3, 0.7))
+    print(f"stream: {U} UAVs, {W} windows x {T} frames, stall at window "
+          f"1 (cap 2 attempts), 3x flood from frame {2 * T}")
+    for w in range(W):
+        rep = gw.serve(gen, n_windows=1, drain=(w == W - 1))
+        print(f"  window {w}: submitted={rep['submitted']} "
+              f"served={rep['served']} shed={rep['shed']} "
+              f"backpressure={gw.backpressure:.2f} "
+              f"degraded={gw.degraded}")
+    rep = gw.report()
+    gw.close()
+    print(f"stream: hit_rate={rep['deadline_hit_rate']:.3f} "
+          f"p99={rep['latency_p99_s']:.1f}s retries={rep['retries']} "
+          f"device_failures={rep['device_failures']} "
+          f"windows_failed={rep['windows_failed']}")
+    assert rep["device_failures"] == 1, "the stalled window must exhaust"
+    assert not gw.degraded, "a healthy window must clear degraded mode"
+    assert rep["served"] > 0 and rep["deadline_hit_rate"] == 1.0
+    assert rep["served"] + rep["shed_total"] == rep["submitted"]
+    print("stream demo recovered: flood shed at admission, stall shed at "
+          "the retry cap, healthy windows served on time")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--chaos", action="store_true",
                     help="run the one-crash chaos recovery demo instead "
                          "of the LM serving demo")
+    ap.add_argument("--stream", action="store_true",
+                    help="run the streaming-gateway flood/stall recovery "
+                         "demo instead of the LM serving demo")
     args = ap.parse_args()
     if args.chaos:
         main_chaos()
+    elif args.stream:
+        main_stream()
     else:
         main_lm()
 

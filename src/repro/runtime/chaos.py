@@ -45,6 +45,21 @@ Event vocabulary (all frames are rollout frame indices):
   ``frame`` on; the device keeps flying (a telemetry fault, not a crash).
 * ``bernoulli(prob)``            — stochastic i.i.d. forced crashes per
   (frame, trajectory, UAV), on top of the scripted events.
+
+Gateway-only events (consumed by ``runtime.gateway.StreamingGateway``
+through the third compile target, ``gateway_timeline``; invisible to the
+rollout tensors and the host heartbeat timeline):
+
+* ``arrival_flood(frame, factor)`` — the open-loop load generator's
+  offered rate is multiplied by ``factor`` for ``frames`` frames: an
+  admission-side overload the bounded queues must absorb or shed.
+* ``device_stall(frame, attempts)`` — the device call for the serving
+  window containing ``frame`` fails its first ``attempts`` attempts
+  (simulated stall/timeout), exercising the gateway's bounded
+  retry + backoff + degradation path.
+* ``clock_skew(frame, skew_s)``  — the gateway's admission clock is
+  shifted by ``skew_s`` seconds over the span: submit stamps (and the
+  deadlines derived from them) drift against the service clock.
 """
 from __future__ import annotations
 
@@ -83,6 +98,16 @@ class FrameEvents:
     straggler_factor: Dict[int, float] = field(default_factory=dict)
     battery_drop_j: Dict[int, float] = field(default_factory=dict)
     faded: Tuple[Tuple[int, int], ...] = ()   # links faded this frame
+
+
+@dataclass
+class GatewayFrameEvents:
+    """The gateway-facing view of one frame of the compiled scenario."""
+
+    frame: int
+    flood_factor: float = 1.0       # offered-load multiplier (floods)
+    stall_attempts: int = 0         # injected device-call failures
+    skew_s: float = 0.0             # admission-clock offset (seconds)
 
 
 class FaultSchedule:
@@ -203,6 +228,44 @@ class FaultSchedule:
                                         else stop) - start, value=prob))
         return self
 
+    def arrival_flood(self, frame: int, factor: float,
+                      frames: int = 1) -> "FaultSchedule":
+        """Gateway-only: multiply the open-loop load generator's offered
+        rate by ``factor`` for ``frames`` frames (0 = to the end) — an
+        arrival flood the admission queues must absorb or shed; the
+        device never sees the overload directly."""
+        self._check(frame)
+        if factor <= 0.0:
+            raise ValueError("flood factor must be positive")
+        self.events.append(ChaosEvent("arrival_flood", frame, frames=frames,
+                                      value=float(factor)))
+        return self
+
+    def device_stall(self, frame: int,
+                     attempts: int = 1) -> "FaultSchedule":
+        """Gateway-only: the device call for the serving window containing
+        ``frame`` fails its first ``attempts`` attempts (a simulated
+        stall / timeout) before succeeding — the gateway's bounded
+        retry + exponential-backoff path must absorb it, or shed the
+        window and degrade when ``attempts`` exceeds the retry cap."""
+        self._check(frame)
+        if attempts < 1:
+            raise ValueError("device_stall needs at least one attempt")
+        self.events.append(ChaosEvent("device_stall", frame,
+                                      size=int(attempts)))
+        return self
+
+    def clock_skew(self, frame: int, skew_s: float,
+                   frames: int = 0) -> "FaultSchedule":
+        """Gateway-only: shift the gateway's admission clock by ``skew_s``
+        seconds for ``frames`` frames (0 = to the end).  Submit stamps —
+        and the absolute deadlines derived from them — drift against the
+        service clock; shedding decisions stay deterministic."""
+        self._check(frame)
+        self.events.append(ChaosEvent("clock_skew", frame, frames=frames,
+                                      value=float(skew_s)))
+        return self
+
     # -- compilation helpers -------------------------------------------
     def key(self) -> tuple:
         """Hashable identity of the scenario (events + seed + shape)."""
@@ -298,7 +361,8 @@ class FaultSchedule:
                 rng = self._event_rng(i)
                 forced[start:stop] |= \
                     rng.random((stop - start, B, U)) < e.value
-            # straggler / silence are host-only
+            # straggler / silence are host-only; arrival_flood /
+            # device_stall / clock_skew are gateway-only (gateway_timeline)
         out: Dict[str, np.ndarray] = {"forced": forced}
         if gain_db is not None:
             out["gain_scale"] = np.broadcast_to(
@@ -341,6 +405,28 @@ class FaultSchedule:
                 for t in range(start, stop):
                     timeline[t].faded = tuple(
                         sorted(set(timeline[t].faded) | set(pairs)))
+        return timeline
+
+    # -- compile target (c): the gateway fault view --------------------
+    def gateway_timeline(self) -> List[GatewayFrameEvents]:
+        """The per-frame serving-edge view of the compiled scenario:
+        offered-load flood multipliers, injected device-call stall
+        attempts, and admission-clock skew — what
+        ``runtime.gateway.StreamingGateway`` consumes.  Pure function of
+        the event list (no randomness), so replays are trivially
+        bitwise."""
+        timeline = [GatewayFrameEvents(frame=t) for t in range(self.frames)]
+        for e in self.events:
+            if e.kind == "arrival_flood":
+                start, stop = self._span(e)
+                for t in range(start, stop):
+                    timeline[t].flood_factor *= e.value
+            elif e.kind == "device_stall":
+                timeline[e.frame].stall_attempts += e.size
+            elif e.kind == "clock_skew":
+                start, stop = self._span(e)
+                for t in range(start, stop):
+                    timeline[t].skew_s += e.value
         return timeline
 
 
@@ -407,4 +493,5 @@ class ChaosHostDriver:
         return t
 
 
-__all__ = ["ChaosEvent", "FaultSchedule", "FrameEvents", "ChaosHostDriver"]
+__all__ = ["ChaosEvent", "FaultSchedule", "FrameEvents", "ChaosHostDriver",
+           "GatewayFrameEvents"]

@@ -242,7 +242,8 @@ class FleetRollout(ScenarioEngine):
             gain_scale: Optional[np.ndarray] = None,
             extra_drain: Optional[np.ndarray] = None,
             mesh=None,
-            devices: Union[None, int, Sequence] = None) -> RolloutTrace:
+            devices: Union[None, int, Sequence] = None,
+            rng: Optional[np.random.Generator] = None) -> RolloutTrace:
         """Roll B trajectories forward T frames in one device call.
 
         ``base_positions``: [U, 2] (tiled over trajectories) or [B, U, 2].
@@ -280,6 +281,12 @@ class FleetRollout(ScenarioEngine):
         host streams to the single-device run it is compared against; B is
         then edge-padded up to a mesh-size multiple and the filler rows
         masked out via ``RolloutTrace.valid``.
+        ``rng``: optional ``numpy`` generator for THIS run's host draws
+        (mobility jitter, failure/recovery uniforms, default arrivals),
+        overriding the constructor-seeded stream.  Callers that replay
+        windows independently of call order — the streaming gateway
+        derives one child generator per serving window — pass it so a
+        retried or reordered call consumes bit-identical draws.
         """
         import jax
         import jax.numpy as jnp
@@ -288,7 +295,7 @@ class FleetRollout(ScenarioEngine):
         U = len(self.devices)
         B = n_trajectories
         T = self.spec.frames if frames is None else frames
-        rng = self._rng
+        rng = self._rng if rng is None else rng
         base = np.asarray(base_positions, np.float64)
         pos0 = np.broadcast_to(base, (B, U, 2)).astype(np.float32).copy() \
             if base.ndim == 2 else base.astype(np.float32)

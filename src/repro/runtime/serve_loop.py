@@ -73,13 +73,26 @@ class ContinuousBatcher:
     (prefill batch 1 into slot i via cache surgery would need per-slot
     cache scatter; instead we re-prefill the whole batch when slots
     change — exact, simple, and fine at example scale).
+
+    ``seed`` feeds the sampling PRNG (temperature > 0 draws), so two
+    batchers over the same requests are reproducible — or deliberately
+    decorrelated.  ``max_pending`` bounds the admission queue: a full
+    queue makes ``submit`` report backpressure (return ``False``)
+    instead of growing ``pending`` without bound; ``None`` keeps the
+    legacy unbounded behavior.
     """
 
-    def __init__(self, model, cfg: ArchConfig, scfg: ServeConfig, params):
+    def __init__(self, model, cfg: ArchConfig, scfg: ServeConfig, params,
+                 seed: int = 0, max_pending: Optional[int] = None):
         self.model = model
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
+        self.seed = int(seed)
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be positive (or None)")
+        self.max_pending = max_pending
+        self.rejected = 0
         self.prefill_step = jax.jit(
             make_prefill_step(model, cfg, scfg.max_seq))
         self.decode_step = jax.jit(
@@ -87,8 +100,15 @@ class ContinuousBatcher:
         self.pending: List[Request] = []
         self.active: List[Request] = []
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue ``req``; returns ``False`` (backpressure, request NOT
+        enqueued) when the pending queue is at ``max_pending``."""
+        if self.max_pending is not None and \
+                len(self.pending) >= self.max_pending:
+            self.rejected += 1
+            return False
         self.pending.append(req)
+        return True
 
     def _batch_prompts(self, reqs: List[Request]) -> np.ndarray:
         maxlen = max(len(r.prompt) + len(r.out) for r in reqs)
@@ -100,7 +120,7 @@ class ContinuousBatcher:
 
     def run(self, max_steps: int = 1000) -> List[Request]:
         done: List[Request] = []
-        key = jax.random.PRNGKey(0)
+        key = jax.random.PRNGKey(self.seed)
         while (self.pending or self.active) and max_steps > 0:
             while self.pending and len(self.active) < self.scfg.max_batch:
                 self.active.append(self.pending.pop(0))
@@ -518,6 +538,27 @@ class ReplanController:
         if self._event is not None and (not self._event["rungs"] or
                                         self._event["rungs"][-1] != rung):
             self._event["rungs"].append(rung)
+
+    # -- gateway fall-through ------------------------------------------
+    def on_device_exhausted(self, frame: int) -> None:
+        """Entry point for the streaming gateway's bounded retry path
+        (``runtime.gateway.StreamingGateway``): the serving device call
+        burned through its attempt cap.  Opens (or deepens) a breach
+        episode and drops straight to the DEGRADED rung with admission
+        shedding on — the gateway's failure falls through to the SAME
+        bounded ladder every other breach uses, so MTTR / degraded-frame
+        metrics aggregate across both."""
+        self._open(frame, kind="device_exhausted")
+        self._climb(self.DEGRADED)
+        self.shedding = True
+
+    def on_device_recovered(self, frame: int) -> None:
+        """Gateway counterpart to ``on_device_exhausted``: a later window
+        solved.  Closes the episode (and stops shedding) when the SLO
+        side is healthy too; a still-breaching SLO keeps the episode
+        open — recovery then happens through ``step`` as usual."""
+        if self.slo_ok():
+            self._recover(frame)
 
     # -- admission control ---------------------------------------------
     def admit(self) -> bool:

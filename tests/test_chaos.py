@@ -385,6 +385,35 @@ class TestReplanControllerLadder:
         admitted = [ctl.admit() for _ in range(8)]
         assert sum(admitted) == 4                      # sheds half
 
+    @pytest.mark.parametrize("cap", [1, 2, 4])
+    def test_retry_cap_boundary_is_exact(self, cap):
+        """EXACTLY ``max_refresh_retries`` forced refreshes under
+        sustained infeasibility — the frames follow the backoff doubling
+        (capped), escalation to DEGRADED happens only after the cap, and
+        no further refresh ever fires (no off-by-one on either side)."""
+        rp = StubReplanner()
+        ctl = ReplanController(rp, max_refresh_retries=cap,
+                               base_backoff_frames=1, max_backoff_frames=4)
+        rp.healthy = False
+        expected, f, b = [], 0, 1
+        for _ in range(cap):
+            expected.append(f)
+            f += b
+            b = min(b * 2, 4)
+        for frame in range(40):
+            ctl.step(frame)
+            # until the cap is hit the controller is still retrying:
+            # it must NOT have dropped to the degraded rung early
+            if len(rp.forced_at) < cap:
+                assert ctl.mode == ctl.EARLY_REFRESH
+                assert not ctl.shedding
+        assert rp.forced_at == expected            # exactly cap, no more
+        assert ctl.mode == ctl.DEGRADED and ctl.shedding
+        m = ctl.metrics()
+        assert m["n_events"] == 1
+        assert m["events"][0]["refresh_attempts"] == cap
+        assert m["events"][0]["rungs"] == [ctl.EARLY_REFRESH, ctl.DEGRADED]
+
     def test_recovery_closes_event_with_metrics(self):
         rp = StubReplanner()
         ctl = ReplanController(rp, max_refresh_retries=2,
