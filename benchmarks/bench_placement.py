@@ -8,7 +8,11 @@ Three ways to place a batch of B scenarios (L-layer chain, U UAVs):
 * legacy  — ``solve_chain_dp_batched_unrolled``: the PR 1 Python-unrolled
             tracer (O(L*S) stacked ops) + per-scenario host backtrack;
 * oracle  — ``placement.solve_chain_dp``, one NumPy solve per scenario
-            (timed on a sample, extrapolated to B).
+            (timed on a sample, extrapolated to B);
+* kernel  — ``solve_chain_dp_batched(use_kernel=True)``: the Pallas
+            tropical-DP wavefront step (ISSUE 9) inside the same scan —
+            asserted bitwise-identical to the fast path and timed against
+            it (``kernel.steady_ratio_vs_fast``).
 
 Reported per path: first-call wall-clock (jit compile + solve + plan
 extraction — the latency a replanning tick actually pays the first time a
@@ -25,6 +29,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import time
 from typing import Dict, Optional
@@ -131,6 +136,24 @@ def run(batch: int = 256, uavs: int = 8, layers: int = 12,
           f"steady {fast['steady_s'] * 1e3:8.1f} ms  "
           f"({fast['scenarios_per_s']:9.1f} scen/s)")
 
+    # the ISSUE 9 Pallas tropical-DP path: same wrapper, use_kernel=True
+    kern, assign_k, lat_k = _time_batched(
+        functools.partial(solve_chain_dp_batched, use_kernel=True), args,
+        repeats)
+    result["kernel"] = kern
+    result["agreement_kernel_vs_fast"] = {
+        "assignments_equal": bool(np.array_equal(assign_k, assign_f)),
+        "latencies_bitwise_equal": bool(
+            np.array_equal(np.asarray(lat_k), np.asarray(lat_f))),
+    }
+    result["kernel"]["steady_ratio_vs_fast"] = \
+        kern["steady_s"] / fast["steady_s"]
+    print(f"kernel  : first {kern['first_call_s']:7.2f}s   "
+          f"steady {kern['steady_s'] * 1e3:8.1f} ms  "
+          f"({kern['scenarios_per_s']:9.1f} scen/s; "
+          f"{kern['steady_ratio_vs_fast']:.2f}x fast, bitwise "
+          f"{result['agreement_kernel_vs_fast']['assignments_equal']})")
+
     if not skip_legacy:
         legacy, assign_l, lat_l = _time_batched(
             solve_chain_dp_batched_unrolled, args, repeats)
@@ -189,6 +212,9 @@ def run(batch: int = 256, uavs: int = 8, layers: int = 12,
 
     assert result["agreement_vs_oracle"]["max_rel_latency_diff"] < 1e-5, \
         "scan DP diverged from the NumPy oracle"
+    assert result["agreement_kernel_vs_fast"]["assignments_equal"] and \
+        result["agreement_kernel_vs_fast"]["latencies_bitwise_equal"], \
+        "tropical-DP kernel path diverged from the jnp scan DP"
     assert result["agreement_vs_oracle"]["assignments_equal"], \
         "scan DP backtracked different assignments than the oracle"
     if not skip_legacy:

@@ -1,7 +1,7 @@
 """Benchmark: the device-side fleet rollout vs the legacy per-frame
 ``SwarmSim`` host loop, plus the mesh-sharded trajectory axis.
 
-Three sections, one JSON (``BENCH_rollout.json``):
+Four sections, one JSON (``BENCH_rollout.json``):
 
 * ``rollout`` — a (B, T, U) fleet rollout (mobility jitter + fused
   P2 -> P1 -> P3 per frame, battery accounting on) in ONE jit call, against
@@ -14,6 +14,9 @@ Three sections, one JSON (``BENCH_rollout.json``):
   few steps per frame because the scan carry WARM-STARTS it — each frame
   refines the previous frame's adopted optimum instead of re-solving from
   scratch; separation quality is asserted below.
+* ``kernel_path`` — the same rollout compiled through the Pallas planner
+  kernels (``use_kernels=True``, ISSUE 9): asserted bitwise-identical to
+  the jnp-path trace, with the steady-state ratio recorded.
 * ``parity`` — B = 1, frozen dynamics: every frame of the rollout must
   match the legacy oracle's latency/power/feasibility (also asserted by
   ``tests/test_rollout.py``); the JSON records the max relative error.
@@ -214,6 +217,49 @@ def bench_devices(batch: int, frames: int, uavs: int, steps: int,
     return out
 
 
+def bench_kernel_path(batch: int, frames: int, uavs: int, steps: int,
+                      repeats: int) -> Dict:
+    """``use_kernels`` on/off: the SAME rollout through the Pallas planner
+    kernels (ISSUE 9 tropical-DP wavefront + fused link geometry) vs the
+    jnp hot loops.  Every trace field must be bitwise identical — the
+    kernels are a program swap, not an approximation — and the steady
+    ratio is recorded (the two compiled programs are distinct PlanFnCache
+    entries, so neither run retraces the other)."""
+    mc = cnn_cost(LENET)
+    devs = make_devices(uavs)
+    spec = RolloutSpec(frames=frames, requests_per_frame=2,
+                       jitter_sigma_m=2.0, battery_j=5e3)
+    base = hex_init(uavs, 40.0, jitter=0.5, seed=0)
+
+    def run_one(use_kernels: bool):
+        ro = FleetRollout(CH, devs, mc, spec,
+                          position_spec=PositionSpec(steps=steps,
+                                                     repair_iters=25),
+                          seed=0, use_kernels=use_kernels)
+        trace = ro.run(base, n_trajectories=batch)
+        jax.block_until_ready((trace.latency,))
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            t = ro.run(base, n_trajectories=batch)
+            jax.block_until_ready((t.latency,))
+            best = min(best, time.perf_counter() - t0)
+        return trace, best
+
+    jnp_trace, jnp_s = run_one(False)
+    ker_trace, ker_s = run_one(True)
+    fields = ("latency", "total_power", "feasible", "cap_feasible",
+              "source_latency", "assign", "positions", "active", "charge",
+              "n_requests", "energy_tx", "energy_cmp")
+    bitwise = all(np.array_equal(getattr(jnp_trace, f),
+                                 getattr(ker_trace, f)) for f in fields)
+    return {"batch": batch, "frames": frames, "uavs": uavs,
+            "jnp_steady_s": jnp_s, "kernel_steady_s": ker_s,
+            "steady_ratio_vs_jnp": ker_s / jnp_s,
+            "bitwise_equal_fields": len(fields) if bitwise else -1,
+            "bitwise_equal": bitwise}
+
+
 def bench_parity(frames: int, uavs: int) -> Dict:
     """B = 1, frozen dynamics: per-frame parity vs the legacy oracle."""
     mc = cnn_cost(LENET)
@@ -273,6 +319,15 @@ def run(batch: int = 256, frames: int = 32, uavs: int = 8, steps: int = 30,
           f"min sep {ro['min_separation_m']:.1f} m, p95 latency "
           f"{ro['p95_latency_s']:.4f}s")
 
+    ker = bench_kernel_path(batch, frames, uavs, steps,
+                            max(2, repeats // 2))
+    result["kernel_path"] = ker
+    print(f"kernels : use_kernels=True "
+          f"{ker['kernel_steady_s'] * 1e3:.1f} ms vs jnp "
+          f"{ker['jnp_steady_s'] * 1e3:.1f} ms "
+          f"({ker['steady_ratio_vs_jnp']:.2f}x), bitwise "
+          f"{ker['bitwise_equal']}")
+
     par = bench_parity(min(frames, 8), uavs)
     result["parity"] = par
     print(f"parity  : feasibility agrees={par['feasibility_agrees']}, "
@@ -296,6 +351,8 @@ def run(batch: int = 256, frames: int = 32, uavs: int = 8, steps: int = 30,
 
     assert ro["retraces_after_first"] == 0, \
         "rollout retraced across repeated runs"
+    assert ker["bitwise_equal"], \
+        "use_kernels rollout diverged from the jnp-path rollout"
     assert par["feasibility_agrees"], "per-frame feasibility diverged"
     assert par["max_latency_rel_err"] < 1e-3 and \
         par["max_power_rel_err"] < 1e-3, "per-frame parity drifted"

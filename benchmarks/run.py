@@ -7,8 +7,9 @@ Modes:
                      CSV.  The LLHR figure points ride the fleet rollout
                      (one device call per point).
 * ``--bench``      — the perf pipeline: runs ``bench_placement``,
-                     ``bench_scenario_engine``, ``bench_positions``,
-                     ``bench_rollout``, ``bench_multisource``,
+                     ``bench_kernels``, ``bench_scenario_engine``,
+                     ``bench_positions``, ``bench_rollout``,
+                     ``bench_multisource``,
                      ``bench_chaos`` and ``bench_gateway`` at full
                      size and writes the corresponding ``BENCH_*.json``
                      files (wall-clock, compile time, speedups vs the
@@ -45,17 +46,20 @@ def run_figures(smoke: bool = False) -> None:
                 fig5_request_scaling):
         mod.main(flags)
     if not smoke:
-        bench_kernels.main()
+        bench_kernels.main([])
 
 
 def run_bench(out_dir: str, smoke: bool) -> None:
-    from benchmarks import (bench_chaos, bench_gateway, bench_multisource,
-                            bench_placement, bench_positions, bench_rollout,
+    from benchmarks import (bench_chaos, bench_gateway, bench_kernels,
+                            bench_multisource, bench_placement,
+                            bench_positions, bench_rollout,
                             bench_scenario_engine)
     os.makedirs(out_dir, exist_ok=True)
     flags = ["--smoke"] if smoke else []
     bench_placement.main(
         flags + ["--json", os.path.join(out_dir, "BENCH_placement.json")])
+    bench_kernels.main(
+        flags + ["--json", os.path.join(out_dir, "BENCH_kernels.json")])
     bench_scenario_engine.main(
         flags + ["--json",
                  os.path.join(out_dir, "BENCH_scenario_engine.json")])

@@ -13,6 +13,8 @@ ARCHS = ["minicpm-2b", "gemma2-9b", "phi4-mini-3.8b", "qwen1.5-4b",
 
 def load(dir_):
     recs = {}
+    if not os.path.isdir(dir_):
+        return recs
     for f in os.listdir(dir_):
         if not f.endswith(".json"):
             continue
@@ -59,6 +61,51 @@ def table(recs, mesh):
     return "\n".join(rows)
 
 
+def planner_kernel_ai(B, M, L, S, U):
+    """Analytic arithmetic intensity (f32 flop/byte) of the two ISSUE 9
+    planner kernels at a given problem shape — the same formulas
+    ``benchmarks/bench_kernels.py`` stamps into ``BENCH_kernels.json``.
+
+    * tropical_dp: one wavefront step is a [B,M,L,S] x (S+1) min-plus
+      contraction plus two argmin reductions (~3 flop-equivalents per
+      contraction element) over the dp/tr/tr0/ct/ok operands and three
+      [B,M,S] outputs.
+    * link_geometry: 17 flops per [B,U,U] link entry (distance incl.
+      sqrt, gain/threshold, row-max power, eq. 5 rate) over positions,
+      active, gain_scale and three [B,U,U] outputs.
+    """
+    dp_flop = 3.0 * B * M * L * S * (S + 1)
+    dp_bytes = 4.0 * (B * M * L * (S + 1) + B * L * S * (S + 1)
+                      + B * M * S + 2 * L * S + 3 * B * M * S)
+    geo_flop = 17.0 * B * U * U
+    geo_bytes = 4.0 * (B * U * 2 + B * U + B * U * U + 3 * B * U * U)
+    return {"tropical_dp": dp_flop / dp_bytes,
+            "link_geometry": geo_flop / geo_bytes}
+
+
+def planner_kernel_table(bench_path="benchmarks/BENCH_kernels.json"):
+    rows = ["| kernel | shape | GFLOP/call | AI (flop/byte) | source |",
+            "|---|---|---|---|---|"]
+    if os.path.exists(bench_path):
+        b = json.load(open(bench_path))
+        for name in ("tropical_dp", "link_geometry"):
+            sec = b.get(name)
+            if not sec:
+                continue
+            shape = "x".join(str(v) for k, v in sorted(sec["config"].items())
+                             if k != "blocks")
+            rows.append(
+                f"| {name} | {shape} | {sec['gflop_per_call']:.4f} "
+                f"| {sec['arithmetic_intensity_flop_per_byte']:.2f} "
+                f"| measured ({bench_path}) |")
+    else:
+        ai = planner_kernel_ai(B=64, M=8, L=12, S=8, U=16)
+        for name, v in ai.items():
+            rows.append(f"| {name} | bench default | — | {v:.2f} "
+                        f"| analytic (run bench_kernels.py --json) |")
+    return "\n".join(rows)
+
+
 def main():
     dir_ = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun"
     recs = load(dir_)
@@ -72,6 +119,9 @@ def main():
         print(f"### Mesh {label}\n")
         print(table(recs, mesh))
         print()
+    print("### Planner Pallas kernels (docs/kernels.md)\n")
+    print(planner_kernel_table())
+    print()
 
 
 if __name__ == "__main__":

@@ -349,12 +349,115 @@ def links_from_assignment_batched(assign: jnp.ndarray, source: jnp.ndarray,
 
 
 @partial(jax.jit, static_argnames=("order",))
+def _chain_dp_solve_kernelized(compute: jnp.ndarray, memory: jnp.ndarray,
+                               act_bits: jnp.ndarray, input_bits: jnp.ndarray,
+                               mem_cap: jnp.ndarray, compute_cap: jnp.ndarray,
+                               throughput: jnp.ndarray, rate: jnp.ndarray,
+                               sources: jnp.ndarray, active: jnp.ndarray,
+                               order: Tuple[int, ...]):
+    """Kernel-path chain DP: the Pallas tropical wavefront step with a
+    native source-slot axis.
+
+    Same recurrence and tie-breaks as ``_chain_dp_solve`` — the operand
+    prep, backward scan and masks are that function's code verbatim; only
+    the forward-step relaxation is swapped for
+    ``kernels.tropical_dp.dp_wavefront_step``.  ``sources`` carries a slot
+    axis [B, M] so the multi-source planner shares ONE kernel launch per
+    step across every (scenario, slot) pair: the transfer tensor ``tr`` is
+    source-independent (its a = 0 row is dead — the kernel folds the
+    per-slot source row ``tr0`` in-register instead of the oracle's
+    ``tr_src`` overwrite).  Returns ``(assign [B, M, L], latency [B, M])``,
+    bitwise-identical to vmapping ``_chain_dp_solve`` over the slot axis.
+    """
+    from repro.kernels.tropical_dp.ops import dp_wavefront_step
+    L = compute.shape[0]
+    S = len(order)
+    B, M = sources.shape
+    INF = jnp.inf
+    order_arr = jnp.asarray(order, jnp.int32)                       # [S]
+    pre_c = jnp.concatenate([jnp.zeros(1), jnp.cumsum(compute)])    # [L+1]
+    pre_m = jnp.concatenate([jnp.zeros(1), jnp.cumsum(memory)])
+    a_ix = jnp.arange(L)
+    bits_in = jnp.where(a_ix == 0, input_bits,
+                        act_bits[jnp.maximum(a_ix - 1, 0)])         # [L]
+
+    mem_cap_o = mem_cap[order_arr]                                  # [S]
+    cmp_cap_o = compute_cap[order_arr]
+    thr_o = throughput[order_arr]
+    active_o = active[:, order_arr]                                 # [B, S]
+
+    # Slot-invariant transfer tensor: identical to _chain_dp_solve's except
+    # the a = 0 row keeps its (dead) placeholder — the kernel overrides that
+    # row with tr0, so one tr serves every source slot.
+    prev_dev = jnp.concatenate([jnp.zeros(1, jnp.int32), order_arr])
+    r_prev = rate[:, prev_dev[:, None], order_arr[None, :]]         # [B,S+1,S]
+    tr = jnp.where(r_prev[:, None, :, :] > 0,
+                   bits_in[None, :, None, None] / r_prev[:, None, :, :],
+                   INF)                                             # [B,L,S+1,S]
+    s0_lt_s = (jnp.arange(S + 1)[:, None]
+               < jnp.arange(1, S + 1)[None, :])                     # [S+1, S]
+    tr = jnp.where(s0_lt_s[None, None] & active_o[:, None, None, :],
+                   tr, INF)
+    tr = tr.swapaxes(2, 3)                                          # [B,L,S,S+1]
+    # per-slot source row, masked exactly like the oracle's tr_src at s0 = 0
+    r_src = rate[jnp.arange(B)[:, None], sources][:, :, order_arr]  # [B, M, S]
+    tr_src = jnp.where(r_src > 0, input_bits / r_src, INF)
+    tr0 = jnp.where(active_o[:, None, :], tr_src, INF)              # [B, M, S]
+
+    dp0 = jnp.full((B, M, L + 1, S + 1), INF).at[:, :, 0, 0].set(0.0)
+
+    def forward(dp, b):
+        blk_c = pre_c[b] - pre_c[:L]                                # [L] (a)
+        blk_m = pre_m[b] - pre_m[:L]
+        ok = ((blk_m[:, None] <= mem_cap_o[None, :] + 1e-9) &
+              (blk_c[:, None] <= cmp_cap_o[None, :] + 1e-9) &
+              (a_ix < b)[:, None])                                  # [L, S]
+        ct = blk_c[:, None] / thr_o[None, :]                        # [L, S]
+        row, pa, ps = dp_wavefront_step(
+            dp[:, :, :L], tr, tr0, ct.astype(jnp.float32),
+            ok.astype(jnp.float32))                                 # [B, M, S]
+        dp = dp.at[:, :, b, :].set(
+            jnp.concatenate([jnp.full((B, M, 1), INF), row], -1))
+        pad = jnp.zeros((B, M, 1), jnp.int32)
+        return dp, (jnp.concatenate([pad, pa], -1),
+                    jnp.concatenate([pad, ps], -1))
+
+    dp, (pa, ps) = jax.lax.scan(forward, dp0, jnp.arange(1, L + 1))
+    # backtrack on R = B * M flattened rows — _chain_dp_solve's reverse
+    # scan verbatim
+    R = B * M
+    final = dp[:, :, L, :].reshape(R, S + 1)                        # [R, S+1]
+    s_best = jnp.argmin(final, 1).astype(jnp.int32)
+    latency = final.min(1)
+    pa = pa.reshape(L, R, S + 1)
+    ps = ps.reshape(L, R, S + 1)
+    rows = jnp.arange(R)
+
+    def backward(carry, j):
+        b, s = carry
+        dev = order_arr[jnp.maximum(s - 1, 0)]                      # [R]
+        bi = jnp.clip(b - 1, 0, L - 1)
+        a = pa[bi, rows, s]
+        s0 = ps[bi, rows, s]
+        at_start = j == a
+        nb = jnp.where(at_start, a, b)
+        ns = jnp.where(at_start, s0, s)
+        return (nb, ns), dev
+
+    init = (jnp.full((R,), L, jnp.int32), s_best)
+    _, devs = jax.lax.scan(backward, init, jnp.arange(L - 1, -1, -1))
+    assign = devs[::-1].T.astype(jnp.int32)                         # [R, L]
+    assign = jnp.where(jnp.isfinite(latency)[:, None], assign, -1)
+    return assign.reshape(B, M, L), latency.reshape(B, M)
+
+
+@partial(jax.jit, static_argnames=("order", "use_kernel"))
 def _chain_dp_solve(compute: jnp.ndarray, memory: jnp.ndarray,
                     act_bits: jnp.ndarray, input_bits: jnp.ndarray,
                     mem_cap: jnp.ndarray, compute_cap: jnp.ndarray,
                     throughput: jnp.ndarray, rate: jnp.ndarray,
                     source: jnp.ndarray, active: jnp.ndarray,
-                    order: Tuple[int, ...]):
+                    order: Tuple[int, ...], use_kernel: bool = False):
     """Scan-based chain DP: solve + backtrack fully on device.
 
     Forward pass: one ``lax.scan`` step per layer count b carries the dense
@@ -368,7 +471,16 @@ def _chain_dp_solve(compute: jnp.ndarray, memory: jnp.ndarray,
     Backward pass: a reverse ``lax.scan`` over layers walks the parent
     pointers (pa = block start, ps = predecessor state, gathered per batch
     element) and emits the full [B, L] device-id assignment — no host loop.
+
+    ``use_kernel=True`` routes the forward relaxation through the Pallas
+    tropical-DP kernel (``_chain_dp_solve_kernelized`` with a single source
+    slot) — bitwise-identical output, tie-breaks included.
     """
+    if use_kernel:
+        assign, latency = _chain_dp_solve_kernelized(
+            compute, memory, act_bits, input_bits, mem_cap, compute_cap,
+            throughput, rate, source[:, None], active, order)
+        return assign[:, 0], latency[:, 0]
     L = compute.shape[0]
     S = len(order)
     B = rate.shape[0]
@@ -469,7 +581,7 @@ def _chain_dp_solve_multi(compute: jnp.ndarray, memory: jnp.ndarray,
                           mem_cap: jnp.ndarray, compute_cap: jnp.ndarray,
                           throughput: jnp.ndarray, rate: jnp.ndarray,
                           sources: jnp.ndarray, active: jnp.ndarray,
-                          order: Tuple[int, ...]):
+                          order: Tuple[int, ...], use_kernel: bool = False):
     """``_chain_dp_solve`` vmapped over a source axis.
 
     The chain DP depends on the capturing UAV only through the first-block
@@ -479,7 +591,17 @@ def _chain_dp_solve_multi(compute: jnp.ndarray, memory: jnp.ndarray,
     ``(assign [B, S, L], latency [B, S])``; the per-request caps inside each
     DP stay per-placement — pricing the frame's aggregate load against the
     period budget is ``placement_compute_load`` + the caller's cap check.
+
+    ``use_kernel=True`` skips the vmap entirely: the Pallas kernel carries
+    the source-slot axis in its grid, so the whole stream shares ONE kernel
+    launch per wavefront step (``_chain_dp_solve_kernelized``) — bitwise-
+    identical output.
     """
+    if use_kernel:
+        return _chain_dp_solve_kernelized(compute, memory, act_bits,
+                                          input_bits, mem_cap, compute_cap,
+                                          throughput, rate, sources, active,
+                                          order)
 
     def one(src):
         return _chain_dp_solve(compute, memory, act_bits, input_bits,
@@ -521,7 +643,8 @@ def solve_chain_dp_multisource(compute: np.ndarray, memory: np.ndarray,
                                throughput: np.ndarray, rate: np.ndarray,
                                sources: np.ndarray,
                                active: Optional[np.ndarray] = None,
-                               device_order: Optional[Sequence[int]] = None
+                               device_order: Optional[Sequence[int]] = None,
+                               use_kernel: bool = False
                                ) -> Tuple[np.ndarray, np.ndarray]:
     """Host-facing multi-source mirror of ``solve_chain_dp_batched``.
 
@@ -538,7 +661,8 @@ def solve_chain_dp_multisource(compute: np.ndarray, memory: np.ndarray,
                               compute_cap, throughput, rate,
                               sources[:, 0], active, device_order)
     args = args[:-2] + (jnp.asarray(sources, jnp.int32),) + args[-1:]
-    assign, latency = _chain_dp_solve_multi(*args, order)
+    assign, latency = _chain_dp_solve_multi(*args, order,
+                                            use_kernel=use_kernel)
     return (np.asarray(assign, dtype=np.int64),
             np.asarray(latency, dtype=np.float64))
 
@@ -637,7 +761,8 @@ def solve_chain_dp_batched(compute: np.ndarray, memory: np.ndarray,
                            throughput: np.ndarray, rate: np.ndarray,
                            source: np.ndarray,
                            active: Optional[np.ndarray] = None,
-                           device_order: Optional[Sequence[int]] = None
+                           device_order: Optional[Sequence[int]] = None,
+                           use_kernel: bool = False
                            ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched mirror of ``placement.solve_chain_dp`` (scan fast path).
 
@@ -653,7 +778,7 @@ def solve_chain_dp_batched(compute: np.ndarray, memory: np.ndarray,
     args, order = _as_dp_args(compute, memory, act_bits, input_bits, mem_cap,
                               compute_cap, throughput, rate, source, active,
                               device_order)
-    assign, latency = _chain_dp_solve(*args, order)
+    assign, latency = _chain_dp_solve(*args, order, use_kernel=use_kernel)
     return (np.asarray(assign, dtype=np.int64),
             np.asarray(latency, dtype=np.float64))
 

@@ -138,7 +138,8 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
                  order: Tuple[int, ...],
                  p2: Optional[PositionSpec] = None,
                  multi_source: bool = False,
-                 max_sources: Optional[int] = None):
+                 max_sources: Optional[int] = None,
+                 use_kernels: bool = False):
     """The WHOLE planning tick as one pure, trace-safe function:
 
         (P2 positions from the input initializations, when ``p2`` is set)
@@ -197,6 +198,13 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
     ``plan_batch`` / ``plan_batch_multi``); ``make_rollout_fn`` embeds the
     SAME multi-source function inside the frame scan, so a rollout frame
     and a batched plan are bit-identical.
+
+    ``use_kernels=True`` swaps the tick's two hot loops for the Pallas
+    kernels — ``kernels.link_geometry`` fuses the four [B, U, U] geometry
+    passes into one, and ``kernels.tropical_dp`` runs the chain-DP
+    wavefront (all source slots in one launch per step).  The emitted
+    plans are bitwise-identical to the jnp path; the flag only selects
+    the program, so it must be part of any compiled-plan cache key.
     """
     compute = jnp.asarray(compute, jnp.float32)
     memory = jnp.asarray(memory, jnp.float32)
@@ -215,6 +223,11 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
                 jnp.float32(2.0 * p2.radius),
                 jnp.float32(coverage_radius(U, p2.radius)),
                 positions.mean(axis=1), p2.steps, p2.repair_iters)
+        if use_kernels:
+            from repro.kernels.link_geometry.ops import fused_link_geometry
+            dist, th, rate = fused_link_geometry(
+                positions, params, active=active, gain_scale=gain_scale)
+            return positions, dist, th, rate
         dist = pairwise_dist_batched(positions)
         th = power_threshold_batched(dist, params, gain_scale=gain_scale)
         pw = solve_power_batched(dist, params, active=active,
@@ -228,7 +241,8 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
                                              p2_links)
         assign, latency = _chain_dp_solve(
             compute, memory, act_bits, input_bits, mem_cap, compute_cap,
-            throughput, rate, source, active, order)
+            throughput, rate, source, active, order,
+            use_kernel=use_kernels)
         used = links_from_assignment_batched(assign, source, U)
         power = solve_power_batched(dist, params, links=used, active=active,
                                     threshold_matrix=th).power
@@ -253,7 +267,8 @@ def make_plan_fn(*, params: RadioParams, compute, memory, act_bits,
         slot_cnt = jnp.take_along_axis(n_req, slot_src, -1)  # [B, S]
         assign_s, lat_s = _chain_dp_solve_multi(
             compute, memory, act_bits, input_bits, mem_cap, compute_cap,
-            throughput, rate, slot_src, active, order)      # [B,S,L],[B,S]
+            throughput, rate, slot_src, active, order,
+            use_kernel=use_kernels)                         # [B,S,L],[B,S]
         requested = slot_cnt > 0
         served = requested & jnp.isfinite(lat_s)
         # arrival-weighted per-request latency; a requested source the DP
@@ -351,7 +366,8 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
                     order: Tuple[int, ...], spec: RolloutSpec,
                     p2: Optional[PositionSpec] = None,
                     mesh=None, with_gain: bool = False,
-                    with_drain: bool = False):
+                    with_drain: bool = False,
+                    use_kernels: bool = False):
     """Compile the (B, T) fleet rollout: ONE jit call, zero host crossings.
 
     With ``mesh`` (a 1-D ``jax.sharding.Mesh``, e.g. from
@@ -412,7 +428,8 @@ def make_rollout_fn(on_trace, *, params: RadioParams, compute, memory,
                          mem_cap=mem_cap, compute_cap=compute_cap,
                          throughput=throughput, order=order, p2=p2,
                          multi_source=True,
-                         max_sources=spec.requests_per_frame)
+                         max_sources=spec.requests_per_frame,
+                         use_kernels=use_kernels)
     act_j = jnp.asarray(act_bits, jnp.float32)
     input_j = jnp.float32(input_bits)
     U = int(np.asarray(mem_cap).shape[0])

@@ -8,19 +8,38 @@ from typing import Optional
 
 import jax
 
+#: Memoized ``jax.default_backend()`` — resolved once per process.  The
+#: backend cannot change under a running process (JAX pins it at first
+#: use), but ``jax.default_backend()`` itself is not free, and every
+#: kernel entry point calls ``resolve_interpret`` on every invocation —
+#: including inside jit tracing, where it runs per trace.  ``None`` =
+#: not resolved yet.
+_DEFAULT_BACKEND: Optional[str] = None
+
+
+def default_backend() -> str:
+    """The process-wide JAX backend, queried once and memoized."""
+    global _DEFAULT_BACKEND
+    if _DEFAULT_BACKEND is None:
+        _DEFAULT_BACKEND = jax.default_backend()
+    return _DEFAULT_BACKEND
+
 
 def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     """Backend-resolved default for Pallas ``interpret`` flags.
 
-    ``None`` (the default everywhere in ``repro.kernels``) resolves at call
-    time: compiled kernels on TPU, interpreter mode on every other backend
-    (CPU/GPU have no Mosaic lowering for these kernels).  Pass an explicit
-    bool to force either mode — e.g. ``interpret=True`` on TPU to debug a
-    kernel, or ``False`` to assert compiled execution.
+    ``None`` (the default everywhere in ``repro.kernels``) resolves from
+    the memoized process backend: compiled kernels on TPU, interpreter
+    mode on every other backend (CPU/GPU have no Mosaic lowering for
+    these kernels).  Pass an explicit bool to force either mode — e.g.
+    ``interpret=True`` on TPU to debug a kernel, or ``False`` to assert
+    compiled execution; the explicit flag always wins over the memoized
+    backend (tested with a monkeypatched backend in
+    ``tests/test_kernels_planner.py``).
     """
     if interpret is not None:
         return interpret
-    return jax.default_backend() != "tpu"
+    return default_backend() != "tpu"
 
 
-__all__ = ["resolve_interpret"]
+__all__ = ["default_backend", "resolve_interpret"]

@@ -1,0 +1,80 @@
+"""Block-size autotune table for the planner Pallas kernels.
+
+The planner kernels (``kernels/tropical_dp``, ``kernels/link_geometry``)
+tile their grids by block sizes that trade VMEM residency against grid
+parallelism.  The right tiles depend on the problem shape AND the
+backend: on CPU the kernels run in Pallas interpret mode, where every
+grid cell is executed sequentially inside the traced program — so the
+fastest configuration is ONE cell covering the whole operand (the body
+then vectorizes exactly like the jnp oracle); on TPU the tiles must fit
+VMEM and align to the 8x128 register file, so small per-cell blocks win.
+
+``lookup(kernel, ...)`` resolves a block dict for a (kernel, backend,
+shape, dtype) query: an exact shape-keyed entry wins, then the backend
+default, then ``{}`` (the kernel entry points fall back to whole-axis
+blocks).  A block value of 0 means "the whole axis".  Entries are plain
+data — measured configurations go straight into ``TABLE``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.kernels import default_backend
+
+#: (kernel, backend[, U, L, S, dtype]) -> block dict.  0 = whole axis.
+#: Backend-level rows are the measured defaults; shape-keyed rows are
+#: overrides for specific production shapes (add rows as they are
+#: profiled — the committed BENCH_kernels.json records the shapes that
+#: matter).
+TABLE: Dict[tuple, Dict[str, int]] = {
+    # CPU = interpret mode: one grid cell, fully vectorized body.
+    ("tropical_dp", "cpu"): {"block_b": 0, "block_m": 0, "block_s": 0},
+    ("link_geometry", "cpu"): {"block_b": 0, "block_u": 0},
+    # TPU: per-row DP tiles (the [L, S+1] working set stays in VMEM),
+    # lane-width state tiles; link geometry tiles rows of the [U, U]
+    # matrices at the 8-sublane granularity.
+    ("tropical_dp", "tpu"): {"block_b": 1, "block_m": 1, "block_s": 128},
+    ("link_geometry", "tpu"): {"block_b": 8, "block_u": 128},
+    # GPU (Triton) runs interpret today as well — same shape as CPU.
+    ("tropical_dp", "gpu"): {"block_b": 0, "block_m": 0, "block_s": 0},
+    ("link_geometry", "gpu"): {"block_b": 0, "block_u": 0},
+    # Shape-keyed overrides: the paper-scale U = L = S = 32 instance
+    # fits a whole scenario per TPU cell.
+    ("tropical_dp", "tpu", 32, 32, 32, "float32"):
+        {"block_b": 1, "block_m": 1, "block_s": 32},
+    ("link_geometry", "tpu", 32, None, None, "float32"):
+        {"block_b": 8, "block_u": 32},
+}
+
+
+def divisor_leq(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>= 1).
+
+    Pallas block shapes must tile their axis exactly (a ragged trailing
+    block would read padding into the reductions), so requested block
+    sizes are snapped down to a divisor of the axis length.
+    """
+    target = max(1, min(int(target), int(n)))
+    while n % target:
+        target -= 1
+    return target
+
+
+def lookup(kernel: str, *, U: Optional[int] = None, L: Optional[int] = None,
+           S: Optional[int] = None, dtype: str = "float32",
+           backend: Optional[str] = None) -> Dict[str, int]:
+    """Block dict for ``kernel`` at shape (U, L, S) / ``dtype`` on
+    ``backend`` (default: the memoized process backend).  Most-specific
+    entry wins; ``{}`` when the table has nothing (callers then use
+    whole-axis blocks)."""
+    backend = default_backend() if backend is None else backend
+    for key in ((kernel, backend, U, L, S, dtype),
+                (kernel, backend, U, None, None, dtype),
+                (kernel, backend)):
+        hit = TABLE.get(key)
+        if hit is not None:
+            return dict(hit)
+    return {}
+
+
+__all__ = ["TABLE", "divisor_leq", "lookup"]

@@ -1,0 +1,1 @@
+"""Fused pairwise-distance -> gain -> threshold -> rate kernel."""

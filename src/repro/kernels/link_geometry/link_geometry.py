@@ -1,0 +1,160 @@
+"""Fused link-geometry Pallas kernel: pairwise distance -> eq. (4) gain
+-> eq. (7) power threshold -> first-pass P1 power -> eq. (5) rate.
+
+The jnp planner runs four separate [B, U, U] passes
+(``pairwise_dist_batched``, ``link_gain_batched`` twice inside
+``power_threshold_batched``/``rate_matrix_batched``, and the
+``solve_power_batched`` row reduction), each a full HBM round trip.
+This kernel computes all of them in ONE pass over row tiles of the link
+matrix: each grid cell holds a [block_b, block_u, 2] row slab of
+positions against ALL U column positions, derives distance, gain and
+threshold in registers, reduces the first-pass P1 power row-locally
+(the eq. (6) row max over feasible links, clamped to P_max — power is a
+per-ROW quantity, so a cell that owns whole rows needs no cross-cell
+reduction), and emits the distance, threshold and rate tiles.  The gain
+matrix is never materialized at all.
+
+Bitwise parity with the jnp oracle (``ref.link_geometry_ref``) holds
+because every elementwise op runs in the oracle's exact order and the
+row max is exact; the radio constants are baked in as Python floats from
+the same frozen ``RadioParams``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.channel import RadioParams
+from repro.kernels import resolve_interpret
+from repro.kernels.autotune import divisor_leq, lookup
+
+
+def _geometry_math(pr, pa, act_r, act_a, gs, eye, *, h0: float, noise: float,
+                   p_max: float, bandwidth: float, expm1_spectral: float):
+    """The fused geometry computation on one row slab.
+
+    ``pr`` [bb, bu, 2] row positions vs ``pa`` [bb, U, 2] all positions,
+    ``eye`` the [.., bu, U] diagonal mask of the slab.  Shared verbatim by
+    the Pallas kernel body (tiles) and ``link_geometry_fused`` (whole
+    arrays), so the two execution paths are the same traced program.
+    """
+    diff = pr[:, :, None, :] - pa[:, None, :, :]
+    dist = jnp.sqrt((diff ** 2).sum(-1))             # [bb, bu, U]
+    d = jnp.maximum(dist, 1.0)                       # d0 = 1 m clamp
+    g = h0 / d ** 2                                  # eq. (4)
+    if gs is not None:
+        g = g * gs
+    th = noise / g * expm1_spectral                  # eq. (7)
+    # first-pass P1 (solve_power_batched with links=None), row-local
+    th_z = jnp.where(eye, 0.0, th)
+    feas = th_z <= p_max                             # diag: th=0 -> True
+    pair = act_r[:, :, None] & act_a[:, None, :]
+    feas = feas & (pair | eye)
+    threshold = jnp.where(feas & ~eye, th_z, 0.0).max(-1)   # [bb, bu]
+    power = jnp.minimum(threshold, p_max)
+    power = jnp.where(act_r, power, 0.0)
+    # eq. (5) at the solved powers; 0 on infeasible links, inf diagonal
+    p_rx = g * power[:, :, None]
+    rate = bandwidth * jnp.log2(1.0 + p_rx / noise)
+    rate = jnp.where(feas, rate, 0.0)
+    rate = jnp.where(eye, jnp.inf, rate)
+    return dist, th, rate
+
+
+def _link_geometry_kernel(pos_row_ref, pos_all_ref, act_row_ref, act_all_ref,
+                          *refs, block_u: int, has_gain: bool, **consts):
+    """One [block_b, block_u(rows), U(cols)] tile of the link matrices."""
+    if has_gain:
+        gs_ref, dist_ref, th_ref, rate_ref = refs
+        gs = gs_ref[...]
+    else:
+        dist_ref, th_ref, rate_ref = refs
+        gs = None
+    shape = dist_ref.shape
+    i_row = pl.program_id(1) * block_u + \
+        jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    i_col = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    dist, th, rate = _geometry_math(
+        pos_row_ref[...], pos_all_ref[...], act_row_ref[...] > 0,
+        act_all_ref[...] > 0, gs, i_row == i_col, **consts)
+    dist_ref[...] = dist
+    th_ref[...] = th
+    rate_ref[...] = rate
+
+
+def _radio_constants(params: RadioParams) -> dict:
+    spectral = params.packet_bits * math.log(2.0) / \
+        (params.bandwidth_hz * params.tau)
+    return dict(h0=params.h0, noise=params.noise_watts,
+                p_max=params.p_max_watts, bandwidth=params.bandwidth_hz,
+                expm1_spectral=math.exp(spectral) - 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def link_geometry_fused(positions: jnp.ndarray, active: jnp.ndarray,
+                        gain_scale: jnp.ndarray | None, *,
+                        params: RadioParams):
+    """The kernel body executed directly on whole arrays.
+
+    Backends without native Pallas lowering (CPU today) run ``pallas_call``
+    through the interpreter, which round-trips every ref through a padded
+    block copy — pure memory-traffic overhead for a kernel whose autotuned
+    CPU launch is a single whole-axis grid cell anyway.  This entry runs
+    the SAME body (``_geometry_math``) as one jitted program, so it is
+    bit-identical to the kernel launch while skipping the copies; the ops
+    dispatcher selects it automatically (``fused_link_geometry``).
+    """
+    U = positions.shape[1]
+    eye = jnp.eye(U, dtype=bool)[None]
+    return _geometry_math(positions, positions, active > 0, active > 0,
+                          gain_scale, eye, **_radio_constants(params))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "params", "block_b", "block_u", "interpret"))
+def link_geometry(positions: jnp.ndarray, active: jnp.ndarray,
+                  gain_scale: jnp.ndarray | None, *, params: RadioParams,
+                  block_b: int | None = None, block_u: int | None = None,
+                  interpret: bool | None = None):
+    """positions [B, U, 2] f32, active [B, U] f32 (0/1), gain_scale
+    [B, U, U] f32 or None -> (dist, threshold, rate), each [B, U, U].
+
+    Block sizes default to the autotune table (``kernels.autotune``,
+    keyed on (U, dtype, backend)); 0/None = whole axis, snapped down to
+    divisors.  Row tiles always span all U columns — the P1 power is a
+    row reduction and stays cell-local.
+    """
+    interpret = resolve_interpret(interpret)
+    B, U, _ = positions.shape
+    tuned = lookup("link_geometry", U=U, dtype=str(positions.dtype))
+    block_b = tuned.get("block_b", 0) if block_b is None else block_b
+    block_u = tuned.get("block_u", 0) if block_u is None else block_u
+    bb = divisor_leq(B, block_b or B)
+    bu = divisor_leq(U, block_u or U)
+    grid = (B // bb, U // bu)
+    kernel = functools.partial(
+        _link_geometry_kernel, block_u=bu,
+        has_gain=gain_scale is not None, **_radio_constants(params))
+    in_specs = [
+        pl.BlockSpec((bb, bu, 2), lambda bi, ui: (bi, ui, 0)),
+        pl.BlockSpec((bb, U, 2), lambda bi, ui: (bi, 0, 0)),
+        pl.BlockSpec((bb, bu), lambda bi, ui: (bi, ui)),
+        pl.BlockSpec((bb, U), lambda bi, ui: (bi, 0)),
+    ]
+    args = [positions, positions, active, active]
+    if gain_scale is not None:
+        in_specs.append(pl.BlockSpec((bb, bu, U), lambda bi, ui: (bi, ui, 0)))
+        args.append(gain_scale)
+    tile = pl.BlockSpec((bb, bu, U), lambda bi, ui: (bi, ui, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[tile, tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((B, U, U), positions.dtype)] * 3,
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,54 @@
+"""Public entry for the fused link-geometry kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.channel import RadioParams
+from repro.kernels import resolve_interpret
+from repro.kernels.link_geometry.link_geometry import (link_geometry,
+                                                       link_geometry_fused)
+from repro.kernels.link_geometry.ref import link_geometry_ref
+
+
+def fused_link_geometry(positions: jnp.ndarray, params: RadioParams,
+                        active: Optional[jnp.ndarray] = None,
+                        gain_scale: Optional[jnp.ndarray] = None, *,
+                        use_kernel: bool = True,
+                        block_b: int | None = None,
+                        block_u: int | None = None,
+                        interpret: bool | None = None):
+    """Fused geometry stage of the planning tick: positions [B, U, 2] ->
+    (dist [B, U, U], eq. (7) threshold matrix, eq. (5) rate at the
+    first-pass P1 powers).
+
+    ``use_kernel`` selects the one-pass fused kernel or the jnp oracle —
+    the four separate batched passes from ``repro.core.batch``.  Both are
+    bitwise-identical (tested).  ``active`` defaults to every UAV alive.
+
+    On backends where Pallas only interprets (CPU), a default-configured
+    fused call (no explicit ``interpret``/block overrides) executes the
+    kernel body directly as one jitted program
+    (``link_geometry_fused`` — same trace, no interpreter block copies);
+    explicit overrides and Pallas-native backends go through
+    ``pallas_call``.
+    """
+    positions = jnp.asarray(positions, jnp.float32)
+    B, U = positions.shape[0], positions.shape[1]
+    if active is None:
+        active = jnp.ones((B, U), dtype=bool)
+    if use_kernel:
+        if (interpret is None and block_b is None and block_u is None
+                and resolve_interpret(None)):
+            return link_geometry_fused(
+                positions, active,
+                None if gain_scale is None
+                else jnp.asarray(gain_scale, jnp.float32), params=params)
+        return link_geometry(
+            positions, active.astype(jnp.float32),
+            None if gain_scale is None
+            else jnp.asarray(gain_scale, jnp.float32),
+            params=params, block_b=block_b, block_u=block_u,
+            interpret=interpret)
+    return link_geometry_ref(positions, active, gain_scale, params=params)

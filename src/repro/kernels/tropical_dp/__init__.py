@@ -1,0 +1,1 @@
+"""Min-plus ("tropical") chain-DP wavefront step kernel."""

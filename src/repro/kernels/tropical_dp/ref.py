@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the tropical-DP wavefront step.
+
+This IS the forward-step body of ``repro.core.batch._chain_dp_solve``
+(the two-stage masked min with ``jnp.argmin`` parent pointers), lifted to
+the kernel's (scenario, source slot) operand layout: the full
+[B, M, L, S, S+1] candidate tensor is materialized per call — exactly
+the intermediate the Pallas kernel's tiling avoids — and the a = 0
+placeholder row is replaced by the per-slot source transfer row the same
+way the solver's ``tr_src`` override does.  The kernel must match this
+bitwise, tie-breaks included.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dp_step_ref(dp: jnp.ndarray, tr: jnp.ndarray, tr0: jnp.ndarray,
+                ct: jnp.ndarray, ok: jnp.ndarray):
+    """Same contract as ``tropical_dp.tropical_dp_step``.
+
+    dp [B, M, L, S+1], tr [B, L, S, S+1], tr0 [B, M, S], ct/ok [L, S]
+    -> (row [B, M, S], pa [B, M, S] int32, ps [B, M, S] int32).
+    """
+    INF = jnp.inf
+    L = tr.shape[1]
+    m1 = dp[:, :, :, None, :] + tr[:, None]          # [B, M, L, S, S+1]
+    s0_best = jnp.argmin(m1, 4).astype(jnp.int32)    # [B, M, L, S]
+    mmin = m1.min(4)
+    # a = 0: the per-slot source row; only dp[0, 0] is finite there, so
+    # the first-argmin predecessor is state 0
+    a_ix = jnp.arange(L)[None, None, :, None]
+    m0 = dp[:, :, 0, 0][..., None] + tr0             # [B, M, S]
+    mmin = jnp.where(a_ix == 0, m0[:, :, None, :], mmin)
+    s0_best = jnp.where(a_ix == 0, 0, s0_best)
+    cand = mmin + ct[None, None]
+    cand = jnp.where(ok[None, None] > 0, cand, INF)
+    a_best = jnp.argmin(cand, 2).astype(jnp.int32)   # [B, M, S]
+    row = cand.min(2)
+    ps = jnp.take_along_axis(s0_best, a_best[:, :, None, :], 2)[:, :, 0]
+    return row, a_best, ps

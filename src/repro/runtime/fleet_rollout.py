@@ -171,10 +171,12 @@ class FleetRollout(ScenarioEngine):
     def __init__(self, channel, devices, model, spec: RolloutSpec,
                  device_order=None, act_scale: float = 1.0,
                  plan_cache=None, position_spec=None, seed: int = 0,
-                 mesh=None, mesh_devices: Union[None, int, Sequence] = None):
+                 mesh=None, mesh_devices: Union[None, int, Sequence] = None,
+                 use_kernels: bool = False):
         super().__init__(channel, devices, model, device_order=device_order,
                          act_scale=act_scale, plan_cache=plan_cache,
-                         position_spec=position_spec)
+                         position_spec=position_spec,
+                         use_kernels=use_kernels)
         self.spec = spec
         self._rng = np.random.default_rng(seed)
         self._default_mesh = self._resolve_mesh(mesh, mesh_devices)
@@ -216,7 +218,8 @@ class FleetRollout(ScenarioEngine):
             input_bits=self.input_bits, mem_cap=self.mem_cap,
             compute_cap=self.compute_cap, throughput=self.throughput,
             order=self.order, spec=self.spec, p2=self.position_spec,
-            mesh=mesh, with_gain=with_gain, with_drain=with_drain))
+            mesh=mesh, with_gain=with_gain, with_drain=with_drain,
+            use_kernels=self.use_kernels))
 
     # ------------------------------------------------------------------
     def _arrival_probs(self) -> np.ndarray:

@@ -227,7 +227,8 @@ def _build_solve_fn(on_trace, *, params: RadioParams, compute, memory,
                     act_bits, input_bits, mem_cap, compute_cap, throughput,
                     order: Tuple[int, ...],
                     p2: Optional[PositionSpec] = None,
-                    multi_source: bool = False):
+                    multi_source: bool = False,
+                    use_kernels: bool = False):
     """One fused jit — the WHOLE planning tick on device.
 
     The actual pipeline lives in ``repro.core.rollout.make_plan_fn`` (it is
@@ -241,7 +242,7 @@ def _build_solve_fn(on_trace, *, params: RadioParams, compute, memory,
                          act_bits=act_bits, input_bits=input_bits,
                          mem_cap=mem_cap, compute_cap=compute_cap,
                          throughput=throughput, order=order, p2=p2,
-                         multi_source=multi_source)
+                         multi_source=multi_source, use_kernels=use_kernels)
 
     def traced(positions, source, active, gain_scale, p2_links):
         on_trace()
@@ -355,7 +356,8 @@ class ScenarioEngine:
                  device_order: Optional[Sequence[int]] = None,
                  act_scale: float = 1.0,
                  plan_cache: Optional[PlanFnCache] = None,
-                 position_spec: Optional[PositionSpec] = None):
+                 position_spec: Optional[PositionSpec] = None,
+                 use_kernels: bool = False):
         self.params = channel.params if isinstance(channel, RadioChannel) \
             else channel
         self.devices = list(devices)
@@ -363,6 +365,7 @@ class ScenarioEngine:
         self.order = tuple(device_order) if device_order is not None else \
             tuple(range(len(self.devices)))
         self.position_spec = position_spec
+        self.use_kernels = bool(use_kernels)
         self.compute = np.array([l.flops for l in model.layers])
         self.memory = np.array([l.weight_bytes for l in model.layers])
         self.act_bits = np.array([l.act_bits for l in model.layers]) * act_scale
@@ -380,7 +383,8 @@ class ScenarioEngine:
             memory=self.memory, act_bits=self.act_bits,
             input_bits=self.input_bits, mem_cap=self.mem_cap,
             compute_cap=self.compute_cap, throughput=self.throughput,
-            order=self.order, p2=self.position_spec)
+            order=self.order, p2=self.position_spec,
+            use_kernels=self.use_kernels)
         self._solve = self.plan_cache.get(solve_key, builder)
         # the multi-source plan is its own compiled callable under its own
         # key, resolved LAZILY on the first plan_batch_multi call so an
@@ -394,12 +398,15 @@ class ScenarioEngine:
     def _cache_key(self) -> tuple:
         """Static signature of the compiled plan: (U, L, S=|order|, dtype)
         plus every constant baked into the traced graph — including the P2
-        hyperparameters when position optimization is fused — so two engines
-        share an entry exactly when their compiled plans would be
+        hyperparameters when position optimization is fused, and the
+        ``use_kernels`` program selector (the Pallas and jnp paths are
+        different traced programs and must never share an entry) — so two
+        engines share an entry exactly when their compiled plans would be
         identical."""
         base = (len(self.devices), len(self.compute), self.order, "float32",
                 self.params,
-                self.position_spec.key() if self.position_spec else None)
+                self.position_spec.key() if self.position_spec else None,
+                self.use_kernels)
         consts = (self.compute.tobytes(), self.memory.tobytes(),
                   self.act_bits.tobytes(), self.input_bits,
                   self.mem_cap.tobytes(), self.compute_cap.tobytes(),

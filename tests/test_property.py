@@ -462,3 +462,82 @@ class TestCheckpointProperties:
             got = ckpt.restore(d, 0, tree)
             for k in ("k0", "k1", "k2"):
                 np.testing.assert_array_equal(got[k], tree[k])
+
+
+class TestKernelParityProperties:
+    """The Pallas planner kernels (ISSUE 9) are BITWISE drop-ins for their
+    jnp oracles on arbitrary shapes and operand values — including the inf
+    masking and first-argmin tie-breaks random integer grids produce in
+    abundance.  Shapes are drawn from a small fixed pool so each example
+    reuses a compiled program instead of forcing a fresh XLA trace."""
+
+    _DP_SHAPES = [(1, 1, 2, 2), (2, 2, 3, 4), (3, 1, 5, 3), (2, 4, 4, 6)]
+    _GEO_SHAPES = [(1, 2), (2, 4), (4, 3), (3, 6)]
+    _dp_ref = None
+    _geo_ref = None
+
+    @classmethod
+    def _refs(cls):
+        import functools
+        import jax
+        from repro.core.channel import RadioParams
+        from repro.kernels.link_geometry.ref import link_geometry_ref
+        from repro.kernels.tropical_dp.ref import dp_step_ref
+        if cls._dp_ref is None:
+            cls._dp_ref = jax.jit(dp_step_ref)
+            cls._geo_ref = jax.jit(functools.partial(
+                link_geometry_ref, params=RadioParams()))
+        return cls._dp_ref, cls._geo_ref
+
+    @given(st.integers(0, len(_DP_SHAPES) - 1), st.integers(0, 2 ** 31),
+           st.floats(0.0, 0.5))
+    @settings(max_examples=10, deadline=None)
+    def test_tropical_dp_step_bitwise(self, shape_i, seed, dead_frac):
+        import jax.numpy as jnp
+        from repro.kernels.tropical_dp.ops import dp_wavefront_step
+        dp_ref, _ = self._refs()
+        B, M, L, S = self._DP_SHAPES[shape_i]
+        rng = np.random.default_rng(seed)
+        dp = rng.integers(0, 6, (B, M, L, S + 1)).astype(np.float32)
+        tr = rng.integers(0, 4, (B, L, S, S + 1)).astype(np.float32)
+        tr0 = rng.integers(0, 4, (B, M, S)).astype(np.float32)
+        for arr in (dp, tr, tr0):
+            arr[rng.random(arr.shape) < dead_frac] = np.inf
+        dp[:, :, 0, :] = np.inf
+        dp[:, :, 0, 0] = 0.0
+        tr[:, 0] = np.inf
+        ct = rng.integers(0, 3, (L, S)).astype(np.float32)
+        ok = (rng.random((L, S)) > dead_frac).astype(np.float32)
+        args = [jnp.asarray(x) for x in (dp, tr, tr0, ct, ok)]
+        ref = dp_ref(*args)
+        got = dp_wavefront_step(*args, use_kernel=True)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @given(st.integers(0, len(_GEO_SHAPES) - 1), st.integers(0, 2 ** 31),
+           st.booleans(), st.booleans())
+    @settings(max_examples=10, deadline=None)
+    def test_link_geometry_bitwise(self, shape_i, seed, with_gain,
+                                   with_dead):
+        import jax.numpy as jnp
+        from repro.core.channel import RadioParams
+        from repro.kernels.link_geometry.ops import fused_link_geometry
+        _, geo_ref = self._refs()
+        B, U = self._GEO_SHAPES[shape_i]
+        rng = np.random.default_rng(seed)
+        pos = jnp.asarray(rng.uniform(0, 400, (B, U, 2)), jnp.float32)
+        active = np.ones((B, U), dtype=bool)
+        if with_dead:
+            active &= rng.random((B, U)) > 0.3
+            active[~active.any(1), 0] = True
+        gain = None
+        if with_gain:
+            g = rng.uniform(0.25, 2.0, (B, U, U))
+            gain = jnp.asarray((g + g.transpose(0, 2, 1)) / 2, jnp.float32)
+        active = jnp.asarray(active)
+        ref = geo_ref(pos, active, gain)
+        got = fused_link_geometry(pos, RadioParams(), active=active,
+                                  gain_scale=gain, use_kernel=True)
+        for name, a, b in zip(("dist", "threshold", "rate"), got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
