@@ -44,8 +44,7 @@ import jax
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from repro.configs.lenet import LENET
-from repro.core import (RadioChannel, RadioParams, RolloutSpec, PositionSpec,
-                        cnn_cost, make_devices)
+from repro.core import (RadioChannel, RadioParams, RolloutSpec, cnn_cost, make_devices)
 from repro.core.positions import hex_init
 from repro.runtime.chaos import ChaosHostDriver, FaultSchedule
 from repro.runtime.fault_tolerance import FaultTolerantRunner, HealthTracker

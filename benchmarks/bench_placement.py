@@ -32,15 +32,13 @@ import argparse
 import functools
 import json
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 
 import jax
 
-from repro.core import (PlacementProblem, RadioChannel, RadioParams,
-                        make_devices, solve_chain_dp, solve_chain_dp_batched,
-                        solve_power, solve_power_batched)
+from repro.core import (PlacementProblem, RadioChannel, RadioParams, make_devices, solve_chain_dp, solve_chain_dp_batched, solve_power_batched)
 from repro.core.batch import (rate_matrix_batched,
                               solve_chain_dp_batched_unrolled)
 

@@ -9,8 +9,9 @@ the legacy host loop via the uniform ``SwarmPlanner`` protocol
 from __future__ import annotations
 
 import time
-from typing import Optional, Tuple
+from typing import Optional
 
+import jax
 import numpy as np
 
 from repro.core import (HeuristicPlanner, LLHRPlanner, RandomPlanner,
@@ -109,8 +110,10 @@ def run_rollout(model: str, n_uavs: int, requests: int, params: RadioParams,
                       position_spec=PositionSpec(steps=position_steps,
                                                  radius=radius), seed=seed)
     base = hex_init(n_uavs, 2.0 * radius, jitter=0.5, seed=seed)
-    ro.run(base, n_trajectories=1)             # warm-up: trace + compile
+    warm = ro.run(base, n_trajectories=1)      # warm-up: trace + compile
+    jax.block_until_ready((warm.latency, warm.charge))
     t0 = time.perf_counter()
     trace = ro.run(base, n_trajectories=1)
+    jax.block_until_ready((trace.latency, trace.charge))
     wall_us = (time.perf_counter() - t0) * 1e6
     return trace, wall_us

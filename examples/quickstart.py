@@ -9,7 +9,6 @@
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.lenet import LENET
 from repro.core import LLHRPlanner, RadioChannel, cnn_cost, make_devices

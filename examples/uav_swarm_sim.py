@@ -11,7 +11,6 @@ its feasibility rate so infeasible frames can't hide inside the mean.
 """
 import argparse
 
-import numpy as np
 
 from repro.configs.alexnet import ALEXNET
 from repro.configs.lenet import LENET

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Architecture config

@@ -11,7 +11,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -19,7 +19,7 @@ from repro.core.channel import RadioChannel
 from repro.core.cost_model import ModelCost
 from repro.core.placement import (Device, PlacementProblem, solve_greedy,
                                   solve_random)
-from repro.core.planner import LLHRPlanner, Plan, PlacementProblem
+from repro.core.planner import LLHRPlanner, PlacementProblem
 
 
 def static_tour_positions(n_uavs: int, t: int, area: float = 480.0,

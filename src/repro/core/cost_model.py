@@ -13,10 +13,10 @@ the roofline analysis.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.configs.base import ArchConfig, CNNConfig, ConvLayerSpec, ShapeConfig
+from repro.configs.base import ArchConfig, CNNConfig, ShapeConfig
 
 
 @dataclass(frozen=True)

@@ -10,16 +10,14 @@ activation hand-offs travel one hop.  Output feeds
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.channel import ICIChannel, ICIParams
-from repro.core.cost_model import LayerCost, ModelCost, arch_cost
-from repro.core.placement import (Device, PlacementProblem,
-                                  PlacementSolution, solve_chain_dp,
-                                  solve_chain_dp_minmax)
+from repro.core.channel import ICIChannel
+from repro.core.cost_model import arch_cost
+from repro.core.placement import (Device, PlacementProblem, solve_chain_dp, solve_chain_dp_minmax)
 from repro.core.positions import assign_stages_to_torus
 
 # TPU v5e chip constants (per the brief).

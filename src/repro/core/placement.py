@@ -26,9 +26,8 @@ compute t_i^p = c_j / e_i (eq. 13), inter-device transfer K_j / rho_ik
 """
 from __future__ import annotations
 
-import heapq
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -14,18 +14,16 @@ TPU runtime reuses.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.channel import RadioChannel
 from repro.core.cost_model import ModelCost
-from repro.core.placement import (Device, PlacementProblem, PlacementSolution,
-                                  INFEASIBLE, place_requests, solve_bnb,
-                                  solve_greedy, solve_random)
+from repro.core.placement import (Device, PlacementProblem, PlacementSolution, place_requests, solve_bnb)
 from repro.core.power import PowerSolution, min_power_for_placement, solve_power
-from repro.core.positions import PositionSolution, solve_positions
+from repro.core.positions import solve_positions
 
 
 @dataclass

@@ -12,7 +12,7 @@ convex + exhaustive search), which doubles as a property test oracle.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
@@ -45,7 +45,6 @@ def solve_power(dist: np.ndarray,
     ``links``: optional [U,U] bool mask of links that must be reliable
     (default: all pairs — the paper sizes power before placement is known).
     """
-    U = dist.shape[0]
     p_max = channel.params.p_max_watts
     th_mat = channel.power_threshold(dist, bits)          # [U,U] eq. (7)
     np.fill_diagonal(th_mat, 0.0)

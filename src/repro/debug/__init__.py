@@ -1,0 +1,4 @@
+"""Debug utilities: trace-discipline sanitizers (see ``sanitize``)."""
+from repro.debug.sanitize import RetraceAuditError, sanitized  # noqa: F401
+
+__all__ = ["RetraceAuditError", "sanitized"]

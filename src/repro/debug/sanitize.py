@@ -1,0 +1,97 @@
+"""Runtime trace-discipline sanitizer.
+
+``sanitized()`` is the dynamic counterpart of ``tools/tracelint``: where
+the linter proves invariants syntactically, this context manager checks
+them on a live run —
+
+* ``jax_debug_nans`` — jit-compiled functions re-run un-jitted when they
+  produce a NaN, turning a silent poisoned latency percentile into an
+  exception at the producing op.  (JAX only checks jit *outputs*, so an
+  intermediate NaN that is masked before the output — an ``inf - inf``
+  inside a ``where`` — will not fire; that is a documented limit, not a
+  green light.)
+* a retrace audit over ``PlanFnCache`` instances — snapshots each
+  cache's per-key trace counters on entry and diffs on exit.  Keys may
+  trace once when they are *new* (first compile is not a retrace);
+  any key that traces again inside the block, or more than
+  ``max_traces_per_new_key`` times when fresh, raises
+  ``RetraceAuditError`` naming the offending keys.  This is the
+  0-retrace invariant the benchmarks assert, packaged as a reusable
+  guard: ``benchmarks/run.py --smoke`` wraps the whole CI pipeline in
+  it.
+
+The audit deliberately reads counters instead of monkeypatching
+``PlanFnCache.get``: compiled entries hold ``partial(self._bump, key)``
+callbacks bound at build time, so patching methods after the fact would
+miss exactly the retraces that matter.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+import jax
+
+from repro.runtime.scenario_engine import PLAN_FN_CACHE, PlanFnCache
+
+
+class RetraceAuditError(AssertionError):
+    """A PlanFnCache key re-traced inside a ``sanitized()`` block."""
+
+
+def _snapshot(caches: Sequence[PlanFnCache]) -> Dict[int, Dict[tuple, int]]:
+    return {id(c): dict(c.traces) for c in caches}
+
+
+def _audit(caches: Sequence[PlanFnCache],
+           before: Dict[int, Dict[tuple, int]],
+           max_traces_per_new_key: int) -> None:
+    offenders: list = []
+    for cache in caches:
+        base = before.get(id(cache), {})
+        for key, count in cache.traces.items():
+            prior = base.get(key)
+            if prior is None:
+                if count > max_traces_per_new_key:
+                    offenders.append((key, 0, count))
+            elif count > prior:
+                offenders.append((key, prior, count))
+    if offenders:
+        lines = "\n".join(
+            f"  {key[0] if key else key}...: {prior} -> {count} traces"
+            for key, prior, count in offenders)
+        raise RetraceAuditError(
+            f"{len(offenders)} plan-cache key(s) re-traced inside a "
+            f"sanitized() block — a static knob is missing from a cache "
+            f"key, or trace-time state leaked into a jitted closure:\n"
+            f"{lines}")
+
+
+@contextmanager
+def sanitized(*caches: PlanFnCache, debug_nans: bool = True,
+              retrace_audit: bool = True,
+              max_traces_per_new_key: int = 1
+              ) -> Iterator[Tuple[PlanFnCache, ...]]:
+    """Run a block under NaN debugging and a plan-cache retrace audit.
+
+    ``caches`` defaults to the process-wide ``PLAN_FN_CACHE``; pass
+    engine-private caches explicitly to audit them too.  The audit runs
+    only when the block exits cleanly — an exception inside the block
+    propagates untouched (half-run counters prove nothing).
+    """
+    audited: Tuple[PlanFnCache, ...] = caches or (PLAN_FN_CACHE,)
+    nan_state: Optional[bool] = None
+    if debug_nans:
+        nan_state = jax.config.jax_debug_nans
+        jax.config.update("jax_debug_nans", True)
+    before = _snapshot(audited)
+    try:
+        yield audited
+    except BaseException:
+        raise
+    else:
+        if retrace_audit:
+            _audit(audited, before, max_traces_per_new_key)
+    finally:
+        if debug_nans:
+            jax.config.update("jax_debug_nans", nan_state)

@@ -42,4 +42,45 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     return default_backend() != "tpu"
 
 
-__all__ = ["default_backend", "resolve_interpret"]
+#: kernel directory -> (ops module, public dispatch entry point).  The
+#: dispatch layer (``ops.py``) is each kernel's supported surface — it
+#: routes to the Pallas kernel or the jnp reference by backend — so both
+#: the kernel name and its entry point resolve through this package and
+#: callers never deep-import kernel internals.
+_KERNEL_OPS = {
+    "conv2d": ("repro.kernels.conv2d.ops", "conv2d"),
+    "decode_attention": ("repro.kernels.decode_attention.ops",
+                         "decode_mha"),
+    "flash_attention": ("repro.kernels.flash_attention.ops", "mha"),
+    "link_geometry": ("repro.kernels.link_geometry.ops",
+                      "fused_link_geometry"),
+    "mlstm_chunk": ("repro.kernels.mlstm_chunk.ops", "mlstm"),
+    "moe_matmul": ("repro.kernels.moe_matmul.ops", "expert_gemm"),
+    "rglru_scan": ("repro.kernels.rglru_scan.ops", "linear_recurrence"),
+    "tropical_dp": ("repro.kernels.tropical_dp.ops", "dp_wavefront_step"),
+}
+_OP_EXPORTS = {op: mod for mod, op in _KERNEL_OPS.values()}
+
+
+def __getattr__(name: str):
+    """Lazy kernel exports: ``kernels.flash_attention`` -> the kernel
+    subpackage (whose ``__init__`` re-exports the ops entry point),
+    ``kernels.mha`` -> the entry point itself.  Kernel names import the
+    subpackage — the same object Python binds on this package when a
+    submodule is imported directly — so resolution is identical whichever
+    happens first.  Lazy so that importing ``repro.kernels`` (which every
+    kernel module does for ``resolve_interpret``) never recursively
+    imports the kernels."""
+    import importlib
+
+    if name in _KERNEL_OPS:
+        return importlib.import_module(f"{__name__}.{name}")
+    if name in _OP_EXPORTS:
+        mod = importlib.import_module(_OP_EXPORTS[name])
+        return getattr(mod, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["default_backend", "resolve_interpret",
+           *sorted(_KERNEL_OPS), *sorted(_OP_EXPORTS)]

@@ -44,6 +44,18 @@ TABLE: Dict[tuple, Dict[str, int]] = {
         {"block_b": 1, "block_m": 1, "block_s": 32},
     ("link_geometry", "tpu", 32, None, None, "float32"):
         {"block_b": 8, "block_u": 32},
+    # Backend-independent defaults for the CNN-layer kernels: these tile
+    # a grid whose cells are identical on every backend (interpret mode
+    # snaps blocks to whole axes via divisor_leq anyway), so one
+    # "default" row per kernel is the source of truth the kernel modules
+    # read their DEFAULT_BLOCK_* constants from.
+    ("conv2d", "default"): {"block_m": 128, "block_n": 128,
+                            "block_k": 128},
+    ("decode_attention", "default"): {"block_k": 512},
+    ("flash_attention", "default"): {"block_q": 128, "block_k": 128},
+    ("mlstm_chunk", "default"): {"chunk": 128},
+    ("moe_matmul", "default"): {"block": 128},
+    ("rglru_scan", "default"): {"block_w": 128},
 }
 
 
@@ -70,11 +82,20 @@ def lookup(kernel: str, *, U: Optional[int] = None, L: Optional[int] = None,
     backend = default_backend() if backend is None else backend
     for key in ((kernel, backend, U, L, S, dtype),
                 (kernel, backend, U, None, None, dtype),
-                (kernel, backend)):
+                (kernel, backend),
+                (kernel, "default")):
         hit = TABLE.get(key)
         if hit is not None:
             return dict(hit)
     return {}
 
 
-__all__ = ["TABLE", "divisor_leq", "lookup"]
+def default_blocks(kernel: str) -> Dict[str, int]:
+    """The kernel's backend-independent ``(kernel, "default")`` row —
+    what the kernel module's ``DEFAULT_BLOCK_*`` constants are read from.
+    ``{}`` when the kernel has no default row (the planner kernels keep
+    per-backend rows only)."""
+    return dict(TABLE.get((kernel, "default"), {}))
+
+
+__all__ = ["TABLE", "default_blocks", "divisor_leq", "lookup"]

@@ -1,0 +1,9 @@
+"""Fused conv2d(+bias+ReLU) tiled-GEMM kernel.
+
+The dispatch entry point (``ops.conv2d``) is the kernel's
+supported surface — re-exported here so ``repro.kernels.conv2d.conv2d``
+and ``repro.kernels.conv2d`` resolve to the same callable.
+"""
+from repro.kernels.conv2d.ops import conv2d  # noqa: F401
+
+__all__ = ["conv2d"]

@@ -17,10 +17,12 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels import resolve_interpret
+from repro.kernels.autotune import default_blocks
 
-DEFAULT_BLOCK_M = 128
-DEFAULT_BLOCK_N = 128
-DEFAULT_BLOCK_K = 128
+_BLOCKS = default_blocks("conv2d")
+DEFAULT_BLOCK_M = _BLOCKS["block_m"]
+DEFAULT_BLOCK_N = _BLOCKS["block_n"]
+DEFAULT_BLOCK_K = _BLOCKS["block_k"]
 
 
 def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,

@@ -2,7 +2,6 @@
 matmul."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,9 @@
+"""Single-step decode attention kernel.
+
+The dispatch entry point (``ops.decode_mha``) is the kernel's
+supported surface — re-exported here so ``repro.kernels.decode_attention.decode_mha``
+and ``repro.kernels.decode_mha`` resolve to the same callable.
+"""
+from repro.kernels.decode_attention.ops import decode_mha  # noqa: F401
+
+__all__ = ["decode_mha"]

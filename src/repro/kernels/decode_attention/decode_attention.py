@@ -19,8 +19,9 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels import resolve_interpret
+from repro.kernels.autotune import default_blocks
 
-DEFAULT_BLOCK_K = 512
+DEFAULT_BLOCK_K = default_blocks("decode_attention")["block_k"]
 NEG_INF = -1e30
 
 

@@ -1,0 +1,9 @@
+"""Flash-attention (online-softmax MHA) kernel.
+
+The dispatch entry point (``ops.mha``) is the kernel's
+supported surface — re-exported here so ``repro.kernels.flash_attention.mha``
+and ``repro.kernels.mha`` resolve to the same callable.
+"""
+from repro.kernels.flash_attention.ops import mha  # noqa: F401
+
+__all__ = ["mha"]

@@ -22,9 +22,11 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels import resolve_interpret
+from repro.kernels.autotune import default_blocks
 
-DEFAULT_BLOCK_Q = 128
-DEFAULT_BLOCK_K = 128
+_BLOCKS = default_blocks("flash_attention")
+DEFAULT_BLOCK_Q = _BLOCKS["block_q"]
+DEFAULT_BLOCK_K = _BLOCKS["block_k"]
 NEG_INF = -1e30
 
 

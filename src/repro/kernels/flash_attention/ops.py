@@ -7,7 +7,6 @@ hardware.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention

@@ -1,1 +1,9 @@
-"""Fused pairwise-distance -> gain -> threshold -> rate kernel."""
+"""Fused pairwise-distance -> gain -> threshold -> rate kernel.
+
+The dispatch entry point (``ops.fused_link_geometry``) is the kernel's
+supported surface — re-exported here so ``repro.kernels.link_geometry.fused_link_geometry``
+and ``repro.kernels.fused_link_geometry`` resolve to the same callable.
+"""
+from repro.kernels.link_geometry.ops import fused_link_geometry  # noqa: F401
+
+__all__ = ["fused_link_geometry"]

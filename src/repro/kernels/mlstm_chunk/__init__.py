@@ -1,0 +1,9 @@
+"""Chunkwise-parallel mLSTM kernel.
+
+The dispatch entry point (``ops.mlstm``) is the kernel's
+supported surface — re-exported here so ``repro.kernels.mlstm_chunk.mlstm``
+and ``repro.kernels.mlstm`` resolve to the same callable.
+"""
+from repro.kernels.mlstm_chunk.ops import mlstm  # noqa: F401
+
+__all__ = ["mlstm"]

@@ -19,6 +19,9 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels import resolve_interpret
+from repro.kernels.autotune import default_blocks
+
+DEFAULT_CHUNK = default_blocks("mlstm_chunk")["chunk"]
 
 NEG_BIG = -1e30
 
@@ -77,7 +80,8 @@ def _mlstm_kernel(q_ref, k_ref, v_ref, a_ref, b_ref, mx_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def mlstm_chunk(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                 i_pre: jnp.ndarray, f_pre: jnp.ndarray, *,
-                chunk: int = 128, interpret: bool | None = None) -> jnp.ndarray:
+                chunk: int = DEFAULT_CHUNK,
+                interpret: bool | None = None) -> jnp.ndarray:
     """q,k,v [B,H,S,D] (q pre-scaled by 1/sqrt(D)); gates [B,H,S].
 
     Returns h [B,H,S,D].  State starts at zero (fresh sequence).

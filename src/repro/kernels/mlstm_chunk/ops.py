@@ -5,12 +5,13 @@ import math
 
 import jax.numpy as jnp
 
-from repro.kernels.mlstm_chunk.mlstm_chunk import mlstm_chunk
+from repro.kernels.mlstm_chunk.mlstm_chunk import DEFAULT_CHUNK, mlstm_chunk
 from repro.kernels.mlstm_chunk.ref import mlstm_ref
 
 
 def mlstm(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-          i_pre: jnp.ndarray, f_pre: jnp.ndarray, *, chunk: int = 128,
+          i_pre: jnp.ndarray, f_pre: jnp.ndarray, *,
+          chunk: int = DEFAULT_CHUNK,
           use_kernel: bool = True, interpret: bool | None = None) -> jnp.ndarray:
     """q,k,v [B,H,S,D] (unscaled q); gates [B,H,S] -> h [B,H,S,D]."""
     q = q * (1.0 / math.sqrt(q.shape[-1]))

@@ -1,0 +1,9 @@
+"""Grouped expert-GEMM (MoE) kernel.
+
+The dispatch entry point (``ops.expert_gemm``) is the kernel's
+supported surface — re-exported here so ``repro.kernels.moe_matmul.expert_gemm``
+and ``repro.kernels.expert_gemm`` resolve to the same callable.
+"""
+from repro.kernels.moe_matmul.ops import expert_gemm  # noqa: F401
+
+__all__ = ["expert_gemm"]

@@ -18,8 +18,9 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels import resolve_interpret
+from repro.kernels.autotune import default_blocks
 
-DEFAULT_BLOCK = 128
+DEFAULT_BLOCK = default_blocks("moe_matmul")["block"]
 
 
 def _moe_kernel(x_ref, w_ref, o_ref, acc_ref, *, d_blocks: int):

@@ -1,0 +1,9 @@
+"""RG-LRU gated linear-recurrence scan kernel.
+
+The dispatch entry point (``ops.linear_recurrence``) is the kernel's
+supported surface — re-exported here so ``repro.kernels.rglru_scan.linear_recurrence``
+and ``repro.kernels.linear_recurrence`` resolve to the same callable.
+"""
+from repro.kernels.rglru_scan.ops import linear_recurrence  # noqa: F401
+
+__all__ = ["linear_recurrence"]

@@ -17,11 +17,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels import resolve_interpret
+from repro.kernels.autotune import default_blocks
 
-DEFAULT_BLOCK_W = 128
+DEFAULT_BLOCK_W = default_blocks("rglru_scan")["block_w"]
 
 
 def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hT_ref, *, seq_len: int):

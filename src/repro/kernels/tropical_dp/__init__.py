@@ -1,1 +1,9 @@
-"""Min-plus ("tropical") chain-DP wavefront step kernel."""
+"""Min-plus ("tropical") chain-DP wavefront step kernel.
+
+The dispatch entry point (``ops.dp_wavefront_step``) is the kernel's
+supported surface — re-exported here so ``repro.kernels.tropical_dp.dp_wavefront_step``
+and ``repro.kernels.dp_wavefront_step`` resolve to the same callable.
+"""
+from repro.kernels.tropical_dp.ops import dp_wavefront_step  # noqa: F401
+
+__all__ = ["dp_wavefront_step"]

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.configs.base import MULTI_POD_MESH, SINGLE_POD_MESH, MeshConfig
+from repro.configs.base import MeshConfig
 
 
 def make_production_mesh(*, multi_pod: bool = False):

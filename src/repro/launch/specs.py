@@ -12,7 +12,6 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig, TrainConfig
-from repro.models import build_model
 from repro.parallel.param_sharding import cache_shardings, param_shardings
 
 Struct = jax.ShapeDtypeStruct

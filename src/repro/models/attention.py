@@ -181,7 +181,6 @@ def decode_attention(p: Params, x: jnp.ndarray, pos: jnp.ndarray,
     Flat cache: write at ``pos``; rolling cache: write at ``pos % window``
     with validity mask reconstructed from slot arithmetic.
     """
-    b = x.shape[0]
     q, k_new, v_new = _qkv(p, x, pos, theta, mrope)
     size = cache["k"].shape[1]
     p_now = pos[..., 0] if pos.ndim == 3 else pos           # [B, 1]

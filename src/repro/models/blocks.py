@@ -9,7 +9,7 @@ apply(params, x, state, ctx) -> (x, new_state, aux)
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

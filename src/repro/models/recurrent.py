@@ -98,7 +98,6 @@ def causal_conv1d(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 def causal_conv1d_step(w: jnp.ndarray, x: jnp.ndarray, buf: jnp.ndarray
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Decode-time conv.  x: [B, width]; buf: [B, K-1, width] (history)."""
-    k = w.shape[0]
     hist = jnp.concatenate([buf, x[:, None]], axis=1)      # [B, K, w]
     out = jnp.einsum("bkw,kw->bw", hist, w.astype(x.dtype))
     return out, hist[:, 1:]

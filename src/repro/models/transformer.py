@@ -12,7 +12,6 @@ costs, so plan and graph always agree.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -10,7 +10,7 @@ in DESIGN.md).  Only 8 layers total, so blocks are unrolled, not scanned.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,13 +17,11 @@ asserts the pipelined forward equals the monolithic forward exactly.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 Pytree = Any
 
@@ -86,7 +84,6 @@ def pipelined_forward(block_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray],
         # (replicated over the stage axis).
         sid = jax.lax.axis_index(axis)
         my_depth = depths_l[0]
-        ticks = n_micro + n_stages - 1
         buf = jnp.zeros_like(micro_l[0])
 
         def apply_blocks(x):

@@ -19,7 +19,7 @@ import queue
 import shutil
 import threading
 import zlib
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np

@@ -11,12 +11,12 @@ removed, exactly like a UAV delegating its subtask.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.placement import Device, PlacementProblem, PlacementSolution
+from repro.core.placement import Device
 from repro.core.pipeline_opt import StagePlan, plan_pipeline
 from repro.runtime import checkpoint as ckpt
 

@@ -14,8 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, TrainConfig
-from repro.optim.adamw import (adamw_update, clip_by_global_norm,
-                               global_norm, init_opt_state)
+from repro.optim.adamw import adamw_update, clip_by_global_norm, init_opt_state
 from repro.optim.grad_compress import compress_tree, decompress_tree, \
     init_error
 from repro.optim.schedules import SCHEDULES

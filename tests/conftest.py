@@ -1,0 +1,8 @@
+"""Shared pytest configuration for the tier-1 suite.
+
+The golden fixtures under ``tests/fixtures/`` are inputs for the
+tracelint rule tests — some deliberately look like test modules
+(``kpkg_tests/test_goodk.py`` feeds the R3 parity-test-mention check) and
+none of them should ever be imported or collected by pytest itself.
+"""
+collect_ignore_glob = ["fixtures/*"]

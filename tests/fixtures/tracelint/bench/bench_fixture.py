@@ -1,0 +1,40 @@
+"""R5 fixture: timed regions with and without device sync (DO NOT FIX
+the bad ones)."""
+import time
+
+import jax
+
+
+def bench_bad(f, x):
+    t0 = time.perf_counter()
+    y = f(x)                             # no sync: times the enqueue only
+    t1 = time.perf_counter()             # R5: flagged at the second read
+    return (t1 - t0), y
+
+
+def bench_good(f, x):
+    t0 = time.perf_counter()
+    y = f(x)
+    jax.block_until_ready(y)
+    t1 = time.perf_counter()
+    return t1 - t0
+
+
+def run_blocking(f, x):
+    y = f(x)
+    jax.block_until_ready(y)
+    return y
+
+
+def bench_via_helper(f, x):
+    t0 = time.perf_counter()             # helper syncs internally: fine
+    run_blocking(f, x)
+    t1 = time.perf_counter()
+    return t1 - t0
+
+
+def bench_host_only(rows):
+    t0 = time.perf_counter()             # pure host work: fine
+    total = sum(len(r) for r in rows)
+    t1 = time.perf_counter()
+    return t1 - t0, total

@@ -1,0 +1,4 @@
+"""R3 fixture kernels package: exports goodk, silently omits badk."""
+from .goodk.ops import apply_goodk
+
+__all__ = ["apply_goodk", "goodk"]

@@ -1,0 +1,7 @@
+"""R3 fixture autotune table: a row for goodk, none for badk."""
+from typing import Dict
+
+TABLE: Dict[tuple, Dict[str, int]] = {
+    ("goodk", "cpu"): {"block": 8},
+    ("goodk", "default"): {"block": 16},
+}

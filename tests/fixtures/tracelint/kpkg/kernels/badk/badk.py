@@ -1,0 +1,6 @@
+"""R3 fixture: a drifted kernel — no ref.py, no ops.py, no export, no
+autotune row, no parity test (DO NOT FIX)."""
+
+
+def badk_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0

@@ -1,0 +1,5 @@
+"""R3 fixture: the conforming kernel."""
+
+
+def goodk_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0

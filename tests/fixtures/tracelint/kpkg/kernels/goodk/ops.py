@@ -1,0 +1,6 @@
+"""R3 fixture: dispatch layer for goodk."""
+from .ref import goodk_ref
+
+
+def apply_goodk(x, use_kernel=False):
+    return goodk_ref(x)

@@ -1,0 +1,5 @@
+"""R3 fixture: pure reference for goodk."""
+
+
+def goodk_ref(x):
+    return x * 2.0

@@ -1,0 +1,6 @@
+"""R3 fixture parity test: mentions only the conforming kernel (not
+collected by pytest — see tests/conftest.py)."""
+
+
+def test_goodk_parity():
+    assert "goodk" == "good" + "k"

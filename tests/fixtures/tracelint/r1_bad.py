@@ -1,0 +1,39 @@
+"""R1 positive fixture: host ops inside traced contexts (DO NOT FIX)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def mean_on_host(x):
+    return np.mean(x)                    # R1: numpy call on a traced value
+
+
+@jax.jit
+def wall_clock_inside(x):
+    t = time.perf_counter()              # R1: host clock inside a trace
+    return x * t
+
+
+@jax.jit
+def item_pull(x):
+    return float(x.sum().item())         # R1: .item() forces a transfer
+
+
+def helper(y):
+    return np.median(y)                  # R1: reached from via_helper
+
+
+@jax.jit
+def via_helper(x):
+    return helper(x + 1.0)               # flagged inside helper, not here
+
+
+def scan_body_host(carry, x):
+    return carry + np.log(x), None       # R1: lax.scan body is traced
+
+
+def run(xs):
+    return jax.lax.scan(scan_body_host, jnp.zeros(()), xs)

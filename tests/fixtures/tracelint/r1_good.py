@@ -1,0 +1,29 @@
+"""R1 negative fixture: trace-safe patterns that must NOT be flagged."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def pure_jnp(x):
+    return jnp.mean(x) + jnp.log1p(jnp.abs(x)).sum()
+
+
+@jax.jit
+def static_reads(x):
+    m, n = x.shape                       # shape reads are host-static
+    return x.reshape(n, m) / jnp.sqrt(jnp.asarray(m, x.dtype))
+
+
+def make_plan_fn(cfg):
+    pad = jnp.asarray(np.zeros(cfg.n))   # builder level: host np is fine
+
+    @jax.jit
+    def plan(x):                         # only the closure is traced
+        return x + pad
+    return plan
+
+
+def outside_trace(x):
+    host = np.asarray(x)                 # not a traced context at all
+    return float(host.mean())

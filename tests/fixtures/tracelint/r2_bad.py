@@ -1,0 +1,19 @@
+"""R2 positive fixture: a builder knob missing from its cache key
+(DO NOT FIX)."""
+from functools import partial
+
+_PLAN_CACHE = {}
+
+
+def make_plan(on_trace, mesh=None, block=8):
+    def plan(x):
+        on_trace()
+        return x * block
+    return plan
+
+
+def solve(cfg, mesh):
+    key = ("plan", cfg.block)            # mesh is NOT in the key
+    fn = _PLAN_CACHE.get(key, partial(make_plan, mesh=mesh,
+                                      block=cfg.block))
+    return fn

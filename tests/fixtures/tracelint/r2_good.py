@@ -1,0 +1,30 @@
+"""R2 negative fixture: complete cache keys that must NOT be flagged."""
+from functools import partial
+
+_PLAN_CACHE = {}
+
+
+def make_plan(on_trace, mesh=None, block=8, relu=True):
+    def plan(x):
+        on_trace()
+        return x * block
+    return plan
+
+
+def _mesh_sig(mesh):
+    return tuple(mesh.shape) if mesh is not None else None
+
+
+def solve(cfg, mesh):
+    key = ("plan", cfg.block, _mesh_sig(mesh))
+    fn = _PLAN_CACHE.get(key, partial(make_plan, mesh=mesh,
+                                      block=cfg.block,
+                                      relu=True))      # literal: pinned
+    return fn
+
+
+def solve_via_local_key(cfg, mesh):
+    sig = _mesh_sig(mesh)
+    key = ("plan2", cfg.block, sig)
+    return _PLAN_CACHE.get(key, partial(make_plan, mesh=mesh,
+                                        block=cfg.block))

@@ -1,0 +1,25 @@
+"""R4 positive fixture: Python branches on traced values (DO NOT FIX)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_value(x):
+    if x.sum() > 0:                      # R4: tracer truthiness
+        return x
+    return -x
+
+
+@jax.jit
+def loop_on_value(x):
+    while jnp.max(x) > 1.0:              # R4: tracer in while condition
+        x = x * 0.5
+    return x
+
+
+@jax.jit
+def derived_branch(x):
+    y = x * 2.0
+    z = y - 1.0
+    cond = z.mean()
+    return x if cond > 0 else -x         # R4: IfExp on derived tracer

@@ -1,0 +1,24 @@
+"""R4 negative fixture: static branches that must NOT be flagged."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def shape_branch(x):
+    if x.ndim == 2:                      # static metadata — fine
+        return x.sum(axis=1)
+    return x
+
+
+@partial(jax.jit, static_argnames=("use_fast",))
+def config_branch(x, use_fast):
+    if use_fast:                         # static knob — fine
+        return jnp.exp(x)
+    return jnp.expm1(x) + 1.0
+
+
+@jax.jit
+def where_select(x):
+    return jnp.where(x > 0, x, -x)       # traced select, not a branch

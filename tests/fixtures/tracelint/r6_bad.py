@@ -1,0 +1,11 @@
+"""R6 positive fixture: unseeded global-state randomness (DO NOT FIX)."""
+import numpy as np
+
+
+def noisy_positions(n):
+    np.random.seed(0)                    # R6: global-state seeding
+    return np.random.rand(n, 3)          # R6: legacy global RNG
+
+
+def jitter(x):
+    return x + np.random.normal(size=x.shape)   # R6

@@ -1,0 +1,12 @@
+"""R6 negative fixture: the seeded Generator discipline (must NOT be
+flagged)."""
+import numpy as np
+
+
+def noisy_positions(n, seed):
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0]))
+    return rng.random((n, 3))
+
+
+def jitter(x, rng):
+    return x + rng.normal(size=x.shape)

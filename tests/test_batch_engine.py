@@ -8,13 +8,9 @@ cases — and the runtime wiring (engine, generator, contingency table,
 periodic replanner, fault-tolerance lookup) must behave.
 """
 import numpy as np
-import pytest
 
 from repro.configs.lenet import LENET
-from repro.core import (Device, LLHRPlanner, PlacementProblem, RadioChannel,
-                        RadioParams, cnn_cost, make_devices,
-                        solve_chain_dp, solve_chain_dp_batched,
-                        solve_power, solve_power_batched)
+from repro.core import (LLHRPlanner, PlacementProblem, RadioChannel, RadioParams, cnn_cost, make_devices, solve_chain_dp, solve_chain_dp_batched, solve_power, solve_power_batched)
 from repro.core.batch import (pairwise_dist_batched, power_threshold_batched,
                               rate_matrix_batched)
 from repro.core.positions import hex_init

@@ -26,9 +26,7 @@ from repro.core.positions import hex_init
 from repro.runtime.chaos import ChaosHostDriver, FaultSchedule
 from repro.runtime.fault_tolerance import FaultTolerantRunner, HealthTracker
 from repro.runtime.fleet_rollout import FleetRollout
-from repro.runtime.scenario_engine import (ContingencyTable, PlanFnCache,
-                                           ScenarioBatch, ScenarioEngine,
-                                           ScenarioGenerator)
+from repro.runtime.scenario_engine import (ContingencyTable, PlanFnCache, ScenarioEngine, ScenarioGenerator)
 from repro.runtime.serve_loop import (PeriodicReplanner, ReplanController,
                                       ServiceLevelObjective)
 

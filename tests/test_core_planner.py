@@ -1,15 +1,11 @@
 """LLHR planner end-to-end + baselines + swarm + cost model tests."""
 import numpy as np
-import pytest
 
 from repro.configs.alexnet import ALEXNET
 from repro.configs.lenet import LENET
-from repro.configs.base import TRAIN_4K, DECODE_32K, ShapeConfig
+from repro.configs.base import TRAIN_4K, DECODE_32K
 from repro.configs.registry import get_arch
-from repro.core import (HeuristicPlanner, LLHRPlanner, RandomPlanner,
-                        RadioChannel, SwarmSim, arch_cost, average_latency,
-                        cnn_cost, make_devices, model_flops, plan_pipeline,
-                        pipeline_efficiency)
+from repro.core import (HeuristicPlanner, LLHRPlanner, RandomPlanner, RadioChannel, SwarmSim, average_latency, cnn_cost, make_devices, model_flops, plan_pipeline, pipeline_efficiency)
 
 
 class TestCostModel:

@@ -2,12 +2,8 @@
 import math
 
 import numpy as np
-import pytest
 
-from repro.core import (Device, PlacementProblem, RadioChannel, RadioParams,
-                        chain_oracle, solve_bnb, solve_brute, solve_chain_dp,
-                        solve_chain_dp_minmax, solve_greedy, solve_power,
-                        solve_random, solve_positions)
+from repro.core import (Device, PlacementProblem, RadioChannel, chain_oracle, solve_bnb, solve_brute, solve_chain_dp, solve_chain_dp_minmax, solve_greedy, solve_power, solve_random, solve_positions)
 from repro.core.power import exhaustive_refine
 
 
@@ -125,7 +121,6 @@ class TestPlacementP3:
     def test_solver_ordering(self):
         """exact <= greedy; both <= random (objective eq. 11)."""
         for seed in range(5):
-            p = small_problem(seed=seed)
             s_exact = solve_bnb(small_problem(seed=seed))
             s_greedy = solve_greedy(small_problem(seed=seed))
             s_rand = solve_random(small_problem(seed=seed), seed=seed)

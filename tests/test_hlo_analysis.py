@@ -1,7 +1,6 @@
 """The loop-aware HLO profiler, tested against graphs with known costs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import parse_hlo, profile

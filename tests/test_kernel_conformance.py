@@ -1,0 +1,99 @@
+"""Regression tests for the kernel house-pattern drift fixed alongside
+tracelint R3: every kernel resolves through the package surface
+(``repro.kernels.<name>`` / entry point), and every kernel module's
+``DEFAULT_*`` block constants come from the shared autotune table's
+``(kernel, "default")`` row instead of ad-hoc constants.
+"""
+import os
+import types
+
+import pytest
+
+from repro import kernels
+from repro.kernels.autotune import TABLE, default_blocks, lookup
+
+KERNEL_DIRS = sorted(
+    d for d in os.listdir(os.path.dirname(kernels.__file__))
+    if os.path.isdir(os.path.join(os.path.dirname(kernels.__file__), d))
+    and not d.startswith("__"))
+
+
+class TestPackageSurface:
+    def test_every_kernel_dir_is_registered(self):
+        assert KERNEL_DIRS == sorted(kernels._KERNEL_OPS)
+
+    @pytest.mark.parametrize("name", KERNEL_DIRS)
+    def test_kernel_name_resolves_to_ops_module(self, name):
+        mod = getattr(kernels, name)
+        assert isinstance(mod, types.ModuleType)
+        _, entry = kernels._KERNEL_OPS[name]
+        assert callable(getattr(mod, entry))
+
+    @pytest.mark.parametrize("name", KERNEL_DIRS)
+    def test_entry_point_resolves_through_package(self, name):
+        _, entry = kernels._KERNEL_OPS[name]
+        via_pkg = getattr(kernels, name) if entry == name \
+            else getattr(kernels, entry)
+        # conv2d: kernel dir and entry point share a name — the
+        # subpackage wins on the package, the fn lives on the subpackage
+        if entry == name:
+            via_pkg = getattr(via_pkg, entry)
+        assert via_pkg is getattr(getattr(kernels, name), entry)
+
+    def test_all_names_resolve(self):
+        for name in kernels.__all__:
+            assert getattr(kernels, name) is not None
+
+    def test_unknown_attribute_still_raises(self):
+        with pytest.raises(AttributeError):
+            kernels.no_such_kernel
+
+
+class TestAutotuneTable:
+    def test_every_kernel_has_a_table_row(self):
+        tuned = {key[0] for key in TABLE}
+        assert set(KERNEL_DIRS) <= tuned
+
+    def test_lookup_falls_back_to_default_row(self):
+        row = lookup("flash_attention", backend="no-such-backend")
+        assert row == default_blocks("flash_attention") != {}
+
+    def test_backend_row_beats_default_row(self):
+        assert lookup("tropical_dp", backend="cpu") == \
+            TABLE[("tropical_dp", "cpu")]
+
+    def test_default_blocks_returns_a_copy(self):
+        row = default_blocks("conv2d")
+        row["block_m"] = -1
+        assert TABLE[("conv2d", "default")]["block_m"] != -1
+
+    def test_kernel_constants_come_from_the_table(self):
+        # import_module: `from repro.kernels.conv2d import conv2d` would
+        # pick the re-exported entry point over the kernel module
+        from importlib import import_module
+        conv_mod = import_module("repro.kernels.conv2d.conv2d")
+        dec_mod = import_module(
+            "repro.kernels.decode_attention.decode_attention")
+        fa_mod = import_module(
+            "repro.kernels.flash_attention.flash_attention")
+        ml_mod = import_module("repro.kernels.mlstm_chunk.mlstm_chunk")
+        moe_mod = import_module("repro.kernels.moe_matmul.moe_matmul")
+        rg_mod = import_module("repro.kernels.rglru_scan.rglru_scan")
+        assert conv_mod.DEFAULT_BLOCK_M == \
+            default_blocks("conv2d")["block_m"]
+        assert conv_mod.DEFAULT_BLOCK_N == \
+            default_blocks("conv2d")["block_n"]
+        assert conv_mod.DEFAULT_BLOCK_K == \
+            default_blocks("conv2d")["block_k"]
+        assert dec_mod.DEFAULT_BLOCK_K == \
+            default_blocks("decode_attention")["block_k"]
+        assert fa_mod.DEFAULT_BLOCK_Q == \
+            default_blocks("flash_attention")["block_q"]
+        assert fa_mod.DEFAULT_BLOCK_K == \
+            default_blocks("flash_attention")["block_k"]
+        assert ml_mod.DEFAULT_CHUNK == \
+            default_blocks("mlstm_chunk")["chunk"]
+        assert moe_mod.DEFAULT_BLOCK == \
+            default_blocks("moe_matmul")["block"]
+        assert rg_mod.DEFAULT_BLOCK_W == \
+            default_blocks("rglru_scan")["block_w"]

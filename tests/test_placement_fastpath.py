@@ -17,7 +17,6 @@ trace counters are bumped from inside the traced bodies, so they move only
 on a real XLA retrace.
 """
 import numpy as np
-import pytest
 
 from repro.configs.lenet import LENET
 from repro.core import (Device, PlacementProblem, RadioChannel, RadioParams,
@@ -215,7 +214,8 @@ class TestPlanCache:
         first = engine.plan_batch(gen.draw(8))
         traces = engine.trace_count
         assert traces > 0
-        plans = [engine.plan_batch(gen.draw(8)) for _ in range(5)]
+        for _ in range(5):
+            engine.plan_batch(gen.draw(8))
         assert engine.trace_count == traces      # zero retraces
         again = engine.plan_batch(first.scenarios)
         np.testing.assert_array_equal(again.assign, first.assign)

@@ -19,7 +19,6 @@ Three layers under test:
 import itertools
 
 import numpy as np
-import pytest
 
 from repro.configs.lenet import LENET
 from repro.core import (ICIChannel, ICIParams, RadioChannel, RadioParams,
@@ -237,7 +236,6 @@ class TestTorusBranchAndBound:
         optimum (brute force over all 9P4 placements)."""
         ch = ICIChannel(ICIParams(torus=(3, 3)))
         coords = [(x, y) for x in range(3) for y in range(3)]
-        rng = np.random.default_rng(0)
         for seed in range(3):
             traffic = self._chain_traffic(4, np.random.default_rng(seed))
             got = assign_stages_to_torus(4, traffic, ch)

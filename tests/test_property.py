@@ -106,7 +106,6 @@ class TestPlacementProperties:
         # adding a device change can only add transfer time
         same = tuple([assign[0]] * p.L)
         if p.feasible(same):
-            lat_chain = p.latency(assign)
             comp_only = p.transfer_time(p.source, same[0], p.input_bits) \
                 + sum(p.compute_time(same[0], j) for j in range(p.L))
             assert p.latency(same) <= comp_only + 1e-9

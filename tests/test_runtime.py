@@ -13,8 +13,7 @@ from repro.core.placement import Device
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM, lm_data
 from repro.models import build_model
 from repro.runtime import checkpoint as ckpt
-from repro.runtime.fault_tolerance import (FaultTolerantRunner,
-                                           HealthTracker, scale_elastic)
+from repro.runtime.fault_tolerance import FaultTolerantRunner
 from repro.runtime.serve_loop import ContinuousBatcher, Request
 from repro.runtime.train_loop import init_state, make_train_step, train_loop
 

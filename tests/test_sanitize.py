@@ -1,0 +1,103 @@
+"""Tests for repro.debug.sanitize — the runtime trace-discipline guard.
+
+The retrace audit is exercised against a real ``PlanFnCache`` with real
+jit closures: a fresh key may trace once inside a ``sanitized()`` block,
+an existing key re-tracing (here: a new input rank) must raise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.debug import RetraceAuditError, sanitized
+from repro.runtime.scenario_engine import PlanFnCache
+
+
+def _builder(on_trace):
+    @jax.jit
+    def f(x):
+        on_trace()
+        return x * 2.0
+    return f
+
+
+class TestRetraceAudit:
+    def test_no_retrace_passes(self):
+        cache = PlanFnCache()
+        fn = cache.get(("k",), _builder)
+        fn(jnp.ones(3))                     # first trace, outside block
+        with sanitized(cache, debug_nans=False):
+            fn(jnp.ones(3))                 # cached signature: no trace
+            fn(2.0 * jnp.ones(3))
+
+    def test_new_key_may_trace_once(self):
+        cache = PlanFnCache()
+        with sanitized(cache, debug_nans=False):
+            fn = cache.get(("fresh",), _builder)
+            fn(jnp.ones(3))
+
+    def test_existing_key_retrace_raises(self):
+        cache = PlanFnCache()
+        fn = cache.get(("k",), _builder)
+        fn(jnp.ones(3))
+        with pytest.raises(RetraceAuditError, match="re-traced"):
+            with sanitized(cache, debug_nans=False):
+                fn(jnp.ones((2, 3)))        # new rank: same key re-traces
+
+    def test_new_key_tracing_twice_raises(self):
+        cache = PlanFnCache()
+        with pytest.raises(RetraceAuditError):
+            with sanitized(cache, debug_nans=False):
+                fn = cache.get(("fresh",), _builder)
+                fn(jnp.ones(3))
+                fn(jnp.ones((2, 3)))        # second signature in-block
+
+    def test_max_traces_per_new_key_widens_the_budget(self):
+        cache = PlanFnCache()
+        with sanitized(cache, debug_nans=False,
+                       max_traces_per_new_key=2):
+            fn = cache.get(("fresh",), _builder)
+            fn(jnp.ones(3))
+            fn(jnp.ones((2, 3)))
+
+    def test_inner_exception_propagates_untouched(self):
+        cache = PlanFnCache()
+        fn = cache.get(("k",), _builder)
+        fn(jnp.ones(3))
+        with pytest.raises(ValueError, match="boom"):
+            with sanitized(cache, debug_nans=False):
+                fn(jnp.ones((2, 3)))        # would fail the audit...
+                raise ValueError("boom")    # ...but the error wins
+
+    def test_audit_can_be_disabled(self):
+        cache = PlanFnCache()
+        fn = cache.get(("k",), _builder)
+        fn(jnp.ones(3))
+        with sanitized(cache, debug_nans=False, retrace_audit=False):
+            fn(jnp.ones((2, 3)))
+
+
+class TestDebugNans:
+    def test_flag_set_inside_and_restored(self):
+        before = jax.config.jax_debug_nans
+        with sanitized(PlanFnCache()):
+            assert jax.config.jax_debug_nans is True
+        assert jax.config.jax_debug_nans == before
+
+    def test_flag_restored_on_exception(self):
+        before = jax.config.jax_debug_nans
+        with pytest.raises(RuntimeError):
+            with sanitized(PlanFnCache()):
+                raise RuntimeError
+        assert jax.config.jax_debug_nans == before
+
+    def test_nan_producing_jit_raises(self):
+        with pytest.raises(FloatingPointError):
+            with sanitized(PlanFnCache()):
+                jax.jit(lambda x: x / x)(jnp.zeros(()))
+
+    def test_clean_numerics_pass(self):
+        with sanitized(PlanFnCache()):
+            out = jax.jit(jnp.log1p)(jnp.ones(4))
+        np.testing.assert_allclose(np.asarray(out), np.log(2.0),
+                                   rtol=1e-6)

@@ -7,7 +7,6 @@ The paper's claims, asserted as tests (EXPERIMENTS.md §Paper-validation):
 Plus the distributed-inference invariant: partitioned execution returns
 bit-identical predictions, and failure delegation keeps the mission alive.
 """
-import dataclasses
 
 import numpy as np
 import pytest

@@ -1,0 +1,6 @@
+"""tracelint: AST-based trace-discipline and kernel-conformance checker.
+
+Run with ``python -m tools.tracelint src tests benchmarks``; see
+``docs/static_analysis.md`` for the rule catalog and allowlist policy.
+"""
+from tools.tracelint.core import RULES, Finding, ProjectIndex, Rule  # noqa: F401

@@ -1,0 +1,106 @@
+"""CLI: ``python -m tools.tracelint [paths...]``.
+
+Exit codes: 0 clean, 1 findings (or stale allowlist entries under
+``strict_allowlist``), 2 usage/config error.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+import tools.tracelint.rules  # noqa: F401  — populates the registry
+from tools.tracelint.config import Config, ConfigError
+from tools.tracelint.core import RULES, ProjectIndex
+from tools.tracelint.report import (detect_format, format_github,
+                                    format_stale, format_text, summary)
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.tracelint",
+        description="AST-based trace-discipline and kernel-conformance "
+                    "checker for the LLHR reproduction")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to scan (default: src)")
+    p.add_argument("--config", default=None,
+                   help="path to tracelint.toml (default: ./tracelint.toml "
+                        "when present)")
+    p.add_argument("--root", default=".",
+                   help="repo root paths are reported relative to")
+    p.add_argument("--format", choices=("auto", "text", "github"),
+                   default="auto",
+                   help="output format (auto = github under CI)")
+    p.add_argument("--select", default=None, metavar="RULES",
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    return p
+
+
+def main(argv: List[str] | None = None) -> int:
+    args = _parser().parse_args(argv)
+
+    if args.list_rules:
+        for rid, cls in sorted(RULES.items()):
+            print(f"{rid}  {cls.name:<24} {cls.doc}")
+        return 0
+
+    config_path = args.config
+    if config_path is None:
+        default = os.path.join(args.root, "tracelint.toml")
+        if os.path.exists(default):
+            config_path = default
+    try:
+        config = Config.load(config_path)
+    except ConfigError as e:
+        print(f"tracelint: config error: {e}", file=sys.stderr)
+        return 2
+
+    selected = list(RULES)
+    if args.select:
+        selected = [r.strip().upper() for r in args.select.split(",")
+                    if r.strip()]
+        unknown = [r for r in selected if r not in RULES]
+        if unknown:
+            print(f"tracelint: unknown rule id(s): {', '.join(unknown)} "
+                  f"(have: {', '.join(RULES)})", file=sys.stderr)
+            return 2
+
+    missing = [p for p in args.paths if not os.path.exists(p)]
+    if missing:
+        print(f"tracelint: path(s) not found: {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    try:
+        index = ProjectIndex.build(args.paths, root=os.path.abspath(
+            args.root), exclude=config.exclude)
+    except SyntaxError as e:
+        print(f"tracelint: cannot parse {e.filename}:{e.lineno}: {e.msg}",
+              file=sys.stderr)
+        return 2
+
+    findings = []
+    for rid in selected:
+        findings.extend(RULES[rid]().check(index, config))
+
+    kept, stale = config.apply_allowlist(findings)
+    suppressed = len(findings) - len(kept)
+
+    fmt = detect_format(args.format)
+    emit = format_github if fmt == "github" else format_text
+    for line in emit(kept):
+        print(line)
+    stale_fails = bool(stale) and config.strict_allowlist
+    if stale:
+        for line in format_stale(stale, fmt):
+            print(line)
+    print(summary(kept, stale, suppressed, len(index.modules)),
+          file=sys.stderr)
+    return 1 if (kept or stale_fails) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

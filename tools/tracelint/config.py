@@ -1,0 +1,150 @@
+"""tracelint configuration: ``tracelint.toml`` loading + allowlists.
+
+The config file lives at the repo root.  Everything has a default, so the
+tool runs without one; the file exists mainly for the per-rule allowlist
+(``[[allow]]`` tables), each entry of which MUST carry a ``reason`` — an
+unjustified suppression is a config error, and an entry that no longer
+matches any finding is reported as stale so the file cannot rot.
+"""
+from __future__ import annotations
+
+import fnmatch
+import os
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+try:                                    # Python 3.11+
+    import tomllib as _toml
+except ModuleNotFoundError:             # 3.10: vendored backport
+    import tomli as _toml
+
+from tools.tracelint.core import Finding
+
+
+class ConfigError(Exception):
+    """Malformed tracelint.toml (exit code 2)."""
+
+
+@dataclass
+class AllowEntry:
+    """One allowlist suppression.
+
+    Matches a finding when the rule id matches AND the path glob matches
+    AND (when given) the line or enclosing-symbol anchor matches.  Prefer
+    ``symbol`` anchors — they survive edits above the site; ``line``
+    anchors are exact."""
+
+    rule: str
+    path: str
+    reason: str
+    line: Optional[int] = None
+    symbol: Optional[str] = None
+    used: int = 0
+
+    def matches(self, f: Finding) -> bool:
+        if self.rule != f.rule:
+            return False
+        if not fnmatch.fnmatch(f.path, self.path):
+            return False
+        if self.line is not None and self.line != f.line:
+            return False
+        if self.symbol is not None \
+                and not fnmatch.fnmatch(f.symbol, self.symbol):
+            return False
+        return True
+
+    def describe(self) -> str:
+        anchor = f":{self.line}" if self.line is not None else \
+            (f"::{self.symbol}" if self.symbol else "")
+        return f"[{self.rule}] {self.path}{anchor}"
+
+
+@dataclass
+class Config:
+    #: repo-relative glob patterns never scanned (rule fixtures etc.).
+    exclude: Tuple[str, ...] = ("tests/fixtures/*", "tests/fixtures/*/*",
+                                "tests/fixtures/*/*/*")
+    #: builders whose nested defs are traced contexts (R1/R4 seeds).
+    trace_roots: Tuple[str, ...] = ("make_plan_fn", "make_rollout_fn")
+    #: kwargs of cache-key builders that are NOT static knobs (R2).
+    r2_ignore_kwargs: Tuple[str, ...] = ("on_trace",)
+    #: the kernels package directory (R3).
+    kernels_package: str = "src/repro/kernels"
+    #: kernel dirs exempt from the house pattern (none by default).
+    r3_exempt: Tuple[str, ...] = ()
+    #: where parity tests live (R3) and what counts as a benchmark (R5).
+    tests_dirs: Tuple[str, ...] = ("tests",)
+    bench_dirs: Tuple[str, ...] = ("benchmarks",)
+    #: call roots that never touch the device (R5 timing regions).
+    r5_host_safe: Tuple[str, ...] = (
+        "time", "np", "numpy", "json", "math", "os", "sys", "print",
+        "len", "range", "int", "float", "str", "bool", "list", "dict",
+        "tuple", "set", "sorted", "enumerate", "zip", "sum", "min", "max",
+        "abs", "round", "format", "append", "extend", "add", "update",
+        "join", "split", "items", "keys", "values", "get", "repr")
+    #: calls that synchronize with the device (R5).
+    r5_sync_calls: Tuple[str, ...] = ("block_until_ready", "device_get")
+    #: np.random attributes that ARE the seeded discipline (R6).
+    r6_allowed: Tuple[str, ...] = (
+        "default_rng", "Generator", "SeedSequence", "BitGenerator",
+        "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64")
+    allow: List[AllowEntry] = field(default_factory=list)
+    #: stale (never-matching) allowlist entries fail the run.
+    strict_allowlist: bool = True
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def load(cls, path: Optional[str]) -> "Config":
+        cfg = cls()
+        if path is None or not os.path.exists(path):
+            if path is not None:
+                raise ConfigError(f"config file not found: {path}")
+            return cfg
+        with open(path, "rb") as fh:
+            try:
+                data = _toml.load(fh)
+            except _toml.TOMLDecodeError as e:
+                raise ConfigError(f"{path}: {e}") from None
+        general = data.get("general", {})
+        for key in ("exclude", "trace_roots", "r2_ignore_kwargs",
+                    "r3_exempt", "tests_dirs", "bench_dirs",
+                    "r5_host_safe", "r5_sync_calls", "r6_allowed"):
+            if key in general:
+                setattr(cfg, key, tuple(general[key]))
+        if "kernels_package" in general:
+            cfg.kernels_package = str(general["kernels_package"])
+        if "strict_allowlist" in general:
+            cfg.strict_allowlist = bool(general["strict_allowlist"])
+        for i, raw in enumerate(data.get("allow", [])):
+            missing = {"rule", "path", "reason"} - set(raw)
+            if missing:
+                raise ConfigError(
+                    f"{path}: [[allow]] entry #{i + 1} is missing required "
+                    f"key(s) {sorted(missing)} — every suppression needs a "
+                    f"rule, a path, and a written reason")
+            if not str(raw["reason"]).strip():
+                raise ConfigError(
+                    f"{path}: [[allow]] entry #{i + 1} has an empty reason "
+                    f"— justify the suppression or remove it")
+            cfg.allow.append(AllowEntry(
+                rule=str(raw["rule"]), path=str(raw["path"]),
+                reason=str(raw["reason"]),
+                line=int(raw["line"]) if "line" in raw else None,
+                symbol=str(raw["symbol"]) if "symbol" in raw else None))
+        return cfg
+
+    # ------------------------------------------------------------------
+    def apply_allowlist(self, findings: Sequence[Finding]
+                        ) -> Tuple[List[Finding], List[AllowEntry]]:
+        """(kept findings, stale entries).  Each finding is suppressed by
+        the FIRST matching entry; entries that match nothing are stale."""
+        kept: List[Finding] = []
+        for f in findings:
+            for entry in self.allow:
+                if entry.matches(f):
+                    entry.used += 1
+                    break
+            else:
+                kept.append(f)
+        stale = [e for e in self.allow if not e.used]
+        return kept, stale

@@ -1,0 +1,324 @@
+"""Core data model for tracelint: findings, the rule registry, and the
+project-wide AST index every rule queries.
+
+tracelint is a *house-invariant* checker, not a general linter: each rule
+encodes one discipline the LLHR reproduction's performance story depends
+on (no host ops inside traced functions, complete compiled-plan cache
+keys, the kernel package pattern, ...).  Rules are AST-only — nothing is
+imported or executed — so the tool is safe to run on any diff and fast
+enough for a pre-commit hook.
+
+The index is deliberately *syntactic*: names are resolved through import
+aliases and a project-wide function table, not a type checker.  Rules are
+therefore heuristics with an allowlist escape hatch (``tracelint.toml``),
+and every allowlist entry must carry a human-readable reason.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file position.
+
+    ``symbol`` is the qualified name of the enclosing function (empty for
+    module-level findings) — allowlist entries may match on it instead of
+    a line number, which survives unrelated edits above the site.
+    """
+
+    rule: str
+    path: str                  # repo-relative, forward slashes
+    line: int
+    col: int
+    message: str
+    symbol: str = ""
+
+    def sort_key(self) -> tuple:
+        return (self.path, self.line, self.col, self.rule)
+
+
+class Rule:
+    """Base class for tracelint rules.
+
+    Subclasses set ``id`` (``"R1"``), ``name`` (kebab-case slug) and
+    ``doc`` (one-line description shown by ``--list-rules``) and implement
+    ``check(index, config) -> list[Finding]``.  Register with
+    ``@register``; the CLI instantiates each registered rule once per run.
+    """
+
+    id: str = ""
+    name: str = ""
+    doc: str = ""
+
+    def check(self, index: "ProjectIndex", config) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, module: "ModuleInfo", node: ast.AST, message: str,
+                symbol: str = "") -> Finding:
+        return Finding(rule=self.id, path=module.rel,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message, symbol=symbol)
+
+
+#: rule id -> rule class, in registration order.
+RULES: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    if not cls.id or cls.id in RULES:
+        raise ValueError(f"rule id {cls.id!r} missing or already registered")
+    RULES[cls.id] = cls
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+def iter_child_funcs(node: ast.AST) -> Iterable[ast.AST]:
+    """Direct child function/lambda definitions of ``node`` (not nested
+    inside further defs)."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            yield child
+        else:
+            yield from iter_child_funcs(child)
+
+
+def walk_skipping_funcs(node: ast.AST) -> Iterable[ast.AST]:
+    """Walk ``node``'s body without descending into nested function or
+    lambda definitions (those are separate traced/untraced contexts)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+# ---------------------------------------------------------------------------
+# Per-module info
+# ---------------------------------------------------------------------------
+
+
+class ModuleInfo:
+    """One parsed source file plus the lookup tables rules need."""
+
+    def __init__(self, path: str, root: str):
+        self.path = os.path.abspath(path)
+        self.rel = os.path.relpath(self.path, root).replace(os.sep, "/")
+        with open(self.path, encoding="utf-8") as fh:
+            self.source = fh.read()
+        self.tree = ast.parse(self.source, filename=self.rel)
+        #: import alias -> dotted module ("np" -> "numpy").
+        self.import_alias: Dict[str, str] = {}
+        #: local name -> (module, original name) for from-imports.
+        self.from_imports: Dict[str, Tuple[str, str]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.import_alias[a.asname or a.name.split(".")[0]] = \
+                        a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.from_imports[a.asname or a.name] = \
+                        (node.module, a.name)
+        #: dotted import path of this module within the project, e.g.
+        #: ``repro.core.batch`` for src/repro/core/batch.py (best effort).
+        self.dotted = self._dotted_path()
+
+    def _dotted_path(self) -> str:
+        rel = self.rel[:-3] if self.rel.endswith(".py") else self.rel
+        parts = rel.split("/")
+        if parts and parts[0] in ("src", "lib"):
+            parts = parts[1:]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def root_module(self, dotted: str) -> Optional[str]:
+        """The real top-level module behind the root of ``dotted`` — e.g.
+        ``"np.random.rand"`` -> ``"numpy"`` — or None if the root is not
+        an import in this module."""
+        root = dotted.split(".")[0]
+        if root in self.import_alias:
+            return self.import_alias[root].split(".")[0]
+        if root in self.from_imports:
+            return self.from_imports[root][0].split(".")[0]
+        return None
+
+    def expanded(self, dotted: str) -> str:
+        """``dotted`` with its leading import alias expanded:
+        ``np.random.rand`` -> ``numpy.random.rand``; from-imported names
+        expand to their origin (``scan`` -> ``jax.lax.scan``)."""
+        parts = dotted.split(".")
+        head = parts[0]
+        if head in self.import_alias:
+            return ".".join([self.import_alias[head]] + parts[1:])
+        if head in self.from_imports:
+            mod, orig = self.from_imports[head]
+            return ".".join([mod, orig] + parts[1:])
+        return dotted
+
+
+@dataclass
+class FuncInfo:
+    """One function (or lambda) definition in the project."""
+
+    node: ast.AST                       # FunctionDef | AsyncFunctionDef | Lambda
+    module: ModuleInfo
+    qualname: str
+    parent: Optional["FuncInfo"] = None
+    class_name: str = ""
+    nested: List["FuncInfo"] = field(default_factory=list)
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+    def key(self) -> tuple:
+        return (self.module.rel, self.qualname,
+                getattr(self.node, "lineno", 0))
+
+
+class ProjectIndex:
+    """Every scanned module plus project-wide function/class tables."""
+
+    def __init__(self, modules: Sequence[ModuleInfo]):
+        self.modules = list(modules)
+        self.by_rel: Dict[str, ModuleInfo] = {m.rel: m for m in modules}
+        self.by_dotted: Dict[str, ModuleInfo] = {m.dotted: m
+                                                 for m in modules}
+        #: bare function name -> every definition with that name.
+        self.functions: Dict[str, List[FuncInfo]] = {}
+        #: (module rel, qualname) -> FuncInfo
+        self.func_by_qualname: Dict[Tuple[str, str], FuncInfo] = {}
+        for mod in self.modules:
+            self._index_module(mod)
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def build(cls, paths: Sequence[str], root: str,
+              exclude: Sequence[str] = ()) -> "ProjectIndex":
+        import fnmatch
+        files: List[str] = []
+        for p in paths:
+            if os.path.isfile(p) and p.endswith(".py"):
+                files.append(p)
+                continue
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+                for f in filenames:
+                    if f.endswith(".py"):
+                        files.append(os.path.join(dirpath, f))
+        modules = []
+        for f in sorted(set(files)):
+            rel = os.path.relpath(os.path.abspath(f), root) \
+                .replace(os.sep, "/")
+            if any(fnmatch.fnmatch(rel, pat) for pat in exclude):
+                continue
+            modules.append(ModuleInfo(f, root))
+        return cls(modules)
+
+    def _index_module(self, mod: ModuleInfo) -> None:
+        def visit(node, qual: str, parent: Optional[FuncInfo],
+                  class_name: str):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, FUNC_NODES):
+                    q = f"{qual}.{child.name}" if qual else child.name
+                    info = FuncInfo(node=child, module=mod, qualname=q,
+                                    parent=parent, class_name=class_name)
+                    if parent is not None:
+                        parent.nested.append(info)
+                    self.functions.setdefault(child.name, []).append(info)
+                    self.func_by_qualname[(mod.rel, q)] = info
+                    visit(child, q, info, class_name)
+                elif isinstance(child, ast.ClassDef):
+                    q = f"{qual}.{child.name}" if qual else child.name
+                    visit(child, q, parent, child.name)
+                else:
+                    visit(child, qual, parent, class_name)
+
+        visit(mod.tree, "", None, "")
+
+    # -- resolution -----------------------------------------------------
+    def resolve_call(self, name: str, caller: FuncInfo
+                     ) -> List[FuncInfo]:
+        """Definitions a bare or dotted call ``name`` made inside
+        ``caller`` may refer to — static scope chain first (sibling nested
+        defs, enclosing functions, module top level), then imports, then
+        the project-wide bare-name table.  Conservative: may return
+        several candidates; returns [] for unresolvable names."""
+        parts = name.split(".")
+        # self.method() -> method in the same module's class (by name)
+        if parts[0] == "self" and len(parts) == 2:
+            return [f for fns in self.functions.values() for f in fns
+                    if f.name == parts[1] and f.class_name]
+        if len(parts) > 1:
+            # module.fn() through an import alias
+            mod_dotted = caller.module.import_alias.get(parts[0])
+            if mod_dotted is not None:
+                target = self.by_dotted.get(
+                    ".".join([mod_dotted] + parts[1:-1]))
+                if target is not None:
+                    return [f for f in self.functions.get(parts[-1], ())
+                            if f.module is target and f.parent is None]
+            return []
+        # lexical scope chain
+        scope = caller
+        while scope is not None:
+            for f in scope.nested:
+                if f.name == name:
+                    return [f]
+            scope = scope.parent
+        for f in self.functions.get(name, ()):
+            if f.module is caller.module and f.parent is None:
+                return [f]
+        # from-import: resolve to the origin module's def when indexed
+        origin = caller.module.from_imports.get(name)
+        if origin is not None:
+            mod, orig = origin
+            target = self.by_dotted.get(mod)
+            if target is not None:
+                return [f for f in self.functions.get(orig, ())
+                        if f.module is target and f.parent is None]
+            # origin module not scanned: fall back to any same-named def
+            return list(self.functions.get(orig, ()))
+        return []

@@ -1,0 +1,79 @@
+"""Finding output: human text and GitHub workflow annotations.
+
+GitHub format emits ``::error file=...,line=...`` workflow commands so CI
+findings appear inline on the PR diff; auto-detection keys off the
+``GITHUB_ACTIONS`` environment variable.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Sequence
+
+from tools.tracelint.config import AllowEntry
+from tools.tracelint.core import RULES, Finding
+
+
+def detect_format(requested: str) -> str:
+    if requested != "auto":
+        return requested
+    return "github" if os.environ.get("GITHUB_ACTIONS") == "true" else "text"
+
+
+def format_text(findings: Sequence[Finding]) -> List[str]:
+    lines = []
+    for f in sorted(findings, key=Finding.sort_key):
+        where = f"{f.path}:{f.line}:{f.col}"
+        sym = f" [{f.symbol}]" if f.symbol else ""
+        lines.append(f"{where}: {f.rule}{sym}: {f.message}")
+    return lines
+
+
+def _gh_escape(text: str) -> str:
+    # workflow-command data: % first, then newlines
+    return (text.replace("%", "%25").replace("\r", "%0D")
+            .replace("\n", "%0A"))
+
+
+def format_github(findings: Sequence[Finding]) -> List[str]:
+    lines = []
+    for f in sorted(findings, key=Finding.sort_key):
+        rule = RULES.get(f.rule)
+        title = _gh_escape(
+            f"tracelint {f.rule} ({rule.name})" if rule else
+            f"tracelint {f.rule}")
+        lines.append(
+            f"::error file={f.path},line={f.line},col={f.col},"
+            f"title={title}::{_gh_escape(f.message)}")
+    return lines
+
+
+def format_stale(stale: Sequence[AllowEntry], fmt: str) -> List[str]:
+    lines = []
+    for e in stale:
+        msg = (f"stale allowlist entry {e.describe()} — it suppresses "
+               f"nothing; remove it (reason was: {e.reason})")
+        if fmt == "github":
+            lines.append(f"::error file=tracelint.toml,"
+                         f"title=tracelint stale allowlist::{_gh_escape(msg)}")
+        else:
+            lines.append(f"tracelint.toml: {msg}")
+    return lines
+
+
+def summary(findings: Sequence[Finding], stale: Sequence[AllowEntry],
+            suppressed: int, n_files: int) -> str:
+    by_rule = {}
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    parts = [f"{n_files} files scanned"]
+    if findings:
+        detail = ", ".join(f"{r}×{c}" for r, c in sorted(by_rule.items()))
+        parts.append(f"{len(findings)} finding(s) ({detail})")
+    else:
+        parts.append("no findings")
+    if suppressed:
+        parts.append(f"{suppressed} suppressed by allowlist")
+    if stale:
+        parts.append(f"{len(stale)} STALE allowlist entr"
+                     f"{'y' if len(stale) == 1 else 'ies'}")
+    return "tracelint: " + "; ".join(parts)

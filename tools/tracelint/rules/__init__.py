@@ -1,0 +1,5 @@
+"""Rule modules.  Importing this package populates the registry —
+``tools.tracelint.core.RULES`` — in rule-id order."""
+from tools.tracelint.rules import (r1_host_ops, r2_cache_keys,  # noqa: F401
+                                   r3_kernel_pattern, r4_tracer_branch,
+                                   r5_bench_timing, r6_seeded_random)

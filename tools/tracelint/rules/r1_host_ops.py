@@ -1,0 +1,93 @@
+"""R1 host-ops-in-trace: no host-side calls inside traced functions.
+
+Inside a jit-compiled function, a ``lax.scan``/``while_loop`` body, or a
+Pallas kernel, host calls are at best a silent constant folded at trace
+time and at worst a crash on a tracer — and either way they re-run on
+every retrace, which is exactly the cost the ``PlanFnCache`` discipline
+exists to avoid.  Flagged inside traced contexts (see
+``tools.tracelint.traced`` for how the set is computed):
+
+* ``np.*`` / ``numpy.*`` calls — use ``jnp``; trace-time constant folding
+  on static values is legal but belongs at builder level, outside the
+  traced closure (allowlist deliberate cases with a reason).
+* ``random.*`` and ``time.*`` calls — host randomness/clocks inside a
+  trace freeze one draw into the compiled program.
+* ``.item()`` — forces a device sync and crashes on tracers.
+* ``float()`` / ``int()`` / ``bool()`` / ``complex()`` applied to values
+  derived from the function's arguments (likely tracers); static-metadata
+  uses (``int(x.shape[0])``) are exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.tracelint.core import (Finding, ProjectIndex, Rule, call_name,
+                                  register, walk_skipping_funcs)
+from tools.tracelint.traced import (TracedSet, discover, only_static_uses,
+                                    tainted_locals)
+
+_HOST_MODULES = ("numpy", "random", "time")
+_CASTS = ("float", "int", "bool", "complex")
+
+
+@register
+class HostOpsRule(Rule):
+    id = "R1"
+    name = "host-ops-in-trace"
+    doc = ("no np.* / random.* / time.* / .item() / float()-on-arrays "
+           "inside jit, lax control-flow bodies, or Pallas kernels")
+
+    def check(self, index: ProjectIndex, config) -> List[Finding]:
+        traced = discover(index, config.trace_roots)
+        findings: List[Finding] = []
+        for fn in traced:
+            findings.extend(self._check_fn(fn, traced))
+        return findings
+
+    def _check_fn(self, fn, traced: TracedSet) -> List[Finding]:
+        mod = fn.module
+        out: List[Finding] = []
+        why = traced.reason(fn)
+        if isinstance(fn.node, ast.Lambda):
+            nodes = list(ast.walk(fn.node.body))
+        else:
+            nodes = list(walk_skipping_funcs(fn.node))
+        tainted = None                     # computed lazily (cast checks)
+        for node in nodes:
+            if not isinstance(node, ast.Call):
+                continue
+            cname = call_name(node)
+            if cname is not None:
+                root_mod = mod.root_module(cname)
+                if root_mod in _HOST_MODULES:
+                    out.append(self.finding(
+                        mod, node,
+                        f"host call `{cname}()` (module `{root_mod}`) "
+                        f"inside traced `{fn.qualname}` ({why}) — use jnp/"
+                        f"lax, or hoist to builder level",
+                        symbol=fn.qualname))
+                    continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item":
+                out.append(self.finding(
+                    mod, node,
+                    f"`.item()` inside traced `{fn.qualname}` ({why}) — "
+                    f"forces a host sync and fails on tracers",
+                    symbol=fn.qualname))
+                continue
+            if cname in _CASTS and node.args:
+                if tainted is None:
+                    tainted = tainted_locals(fn, traced)
+                arg = node.args[0]
+                mentions = any(isinstance(n, ast.Name)
+                               and n.id in tainted
+                               for n in ast.walk(arg))
+                if mentions and not only_static_uses(arg, tainted):
+                    out.append(self.finding(
+                        mod, node,
+                        f"`{cname}()` on a traced-argument-derived value "
+                        f"inside `{fn.qualname}` ({why}) — fails on "
+                        f"tracers; static shape/dtype reads are fine",
+                        symbol=fn.qualname))
+        return out

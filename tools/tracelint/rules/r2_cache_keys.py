@@ -1,0 +1,280 @@
+"""R2 cache-key completeness: every static knob of a compiled-plan
+builder must reach the cache key it is stored under.
+
+The retrace discipline rests on ``PlanFnCache``: compiled callables are
+stored under a tuple key that must encode EVERYTHING baked into the
+traced program — ``use_kernels`` selects a different program,
+``PositionSpec`` changes the fused P2 stage, the mesh signature
+specializes the ``shard_map`` lowering.  A knob passed to the builder but
+missing from the key makes two different programs collide on one entry:
+silently wrong results or a retrace storm, depending on which wins.  This
+is the class of bug PR 6 fixed by hand (mesh signature absent from the
+rollout keys); R2 makes it mechanical.
+
+Detection (purely syntactic):
+
+1. Find cache resolutions — calls ``<recv>.get(key, builder)`` where the
+   receiver's source mentions ``cache``.
+2. Resolve ``builder`` to a ``functools.partial(<builder_fn>, **kwargs)``
+   (through local variables and ``self.<attr>`` assignments, partials of
+   partials included).  Every keyword argument except the configured
+   ignores (``on_trace``) is a static knob: in the house builder pattern
+   ALL builder arguments are closed over and baked into the trace.
+3. Resolve the ``key`` expression to its *atom set*: every identifier it
+   syntactically reaches — through local assignments, ``self.<attr>``
+   assignments, and calls into project functions (``self._cache_key()``
+   contributes the atoms of its return expression).
+4. For each knob whose value is not a literal: some identifier from the
+   knob's value expression must appear in the key's atom set.  A knob
+   passed as a literal constant is pinned by its call site (the sites use
+   distinct key tags) and is skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.tracelint.core import (Finding, FuncInfo, ModuleInfo,
+                                  ProjectIndex, Rule, call_name,
+                                  dotted_name, register,
+                                  walk_skipping_funcs)
+
+_MAX_DEPTH = 10
+
+
+def _local_assignments(fn: Optional[FuncInfo]) -> Dict[str, List[ast.AST]]:
+    """name -> value expressions assigned to it inside ``fn``."""
+    out: Dict[str, List[ast.AST]] = {}
+    if fn is None:
+        return out
+    for node in walk_skipping_funcs(fn.node):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.setdefault(t.id, []).append(node.value)
+                elif isinstance(t, ast.Tuple):
+                    for el in t.elts:
+                        if isinstance(el, ast.Name):
+                            out.setdefault(el.id, []).append(node.value)
+        elif isinstance(node, ast.AugAssign) \
+                and isinstance(node.target, ast.Name):
+            out.setdefault(node.target.id, []).append(node.value)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                and isinstance(node.target, ast.Name):
+            out.setdefault(node.target.id, []).append(node.value)
+    return out
+
+
+def _class_attr_assignments(index: ProjectIndex, cls_name: str
+                            ) -> Dict[str, List[Tuple[ast.AST, FuncInfo]]]:
+    """attr -> [(value expr, method it was assigned in)] for every
+    ``self.<attr> = value`` in methods of classes named ``cls_name``
+    project-wide (name-based: inheritance is resolved by bare name)."""
+    out: Dict[str, List[Tuple[ast.AST, FuncInfo]]] = {}
+    for fns in index.functions.values():
+        for fn in fns:
+            if fn.class_name != cls_name or isinstance(fn.node, ast.Lambda):
+                continue
+            for node in walk_skipping_funcs(fn.node):
+                if not isinstance(node, ast.Assign):
+                    continue
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id == "self":
+                        out.setdefault(t.attr, []).append((node.value, fn))
+        # also any class in the same module hierarchy: handled by caller
+    return out
+
+
+class _AtomCollector:
+    """Collects the identifier atoms a key expression reaches."""
+
+    def __init__(self, index: ProjectIndex):
+        self.index = index
+        self.atoms: Set[str] = set()
+        self._seen: Set[tuple] = set()
+
+    def collect(self, expr: ast.AST, fn: Optional[FuncInfo],
+                module: ModuleInfo, depth: int = 0) -> None:
+        if depth > _MAX_DEPTH:
+            return
+        key = (module.rel, getattr(expr, "lineno", 0),
+               getattr(expr, "col_offset", -1), type(expr).__name__)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        locals_ = _local_assignments(fn)
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name):
+                self.atoms.add(node.id)
+                for value in locals_.get(node.id, ()):
+                    self.collect(value, fn, module, depth + 1)
+            elif isinstance(node, ast.Attribute):
+                self.atoms.add(node.attr)
+                if isinstance(node.value, ast.Name) \
+                        and node.value.id == "self" and fn is not None \
+                        and fn.class_name:
+                    for value, meth in self._self_attr(fn, node.attr):
+                        self.collect(value, meth, meth.module, depth + 1)
+            elif isinstance(node, ast.Call):
+                cname = call_name(node)
+                if cname is not None:
+                    leaf = cname.split(".")[-1]
+                    for callee in self._callees(leaf, fn):
+                        self._collect_returns(callee, depth + 1)
+
+    def _self_attr(self, fn: FuncInfo, attr: str):
+        hits = []
+        attrs = _class_attr_assignments(self.index, fn.class_name)
+        hits.extend(attrs.get(attr, ()))
+        return hits
+
+    def _callees(self, name: str, fn: Optional[FuncInfo]) -> List[FuncInfo]:
+        # bare-name project-wide resolution: `self._cache_key()` must find
+        # the method even when it lives on a base class in another module
+        return list(self.index.functions.get(name, ()))
+
+    def _collect_returns(self, callee: FuncInfo, depth: int) -> None:
+        if isinstance(callee.node, ast.Lambda):
+            self.collect(callee.node.body, callee.parent, callee.module,
+                         depth)
+            return
+        k = ("fn",) + callee.key()
+        if k in self._seen:
+            return
+        self._seen.add(k)
+        for node in walk_skipping_funcs(callee.node):
+            if isinstance(node, ast.Return) and node.value is not None:
+                self.collect(node.value, callee, callee.module, depth)
+
+
+def _value_atoms(expr: ast.AST) -> Set[str]:
+    atoms = {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+    atoms |= {n.attr for n in ast.walk(expr)
+              if isinstance(n, ast.Attribute)}
+    atoms.discard("self")
+    return atoms
+
+
+def _is_literal(expr: ast.AST) -> bool:
+    try:
+        ast.literal_eval(expr)
+        return True
+    except (ValueError, TypeError, SyntaxError, MemoryError):
+        return False
+
+
+@register
+class CacheKeyRule(Rule):
+    id = "R2"
+    name = "cache-key-completeness"
+    doc = ("every static knob passed to a compiled-plan builder must "
+           "syntactically reach the PlanFnCache key tuple")
+
+    def check(self, index: ProjectIndex, config) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in index.modules:
+            for fn in self._functions_of(index, mod):
+                body = fn.node if fn is not None else mod.tree
+                for node in walk_skipping_funcs(body):
+                    if not self._is_cache_get(node):
+                        continue
+                    findings.extend(self._check_site(
+                        index, config, mod, fn, node))
+        return findings
+
+    @staticmethod
+    def _functions_of(index: ProjectIndex, mod: ModuleInfo):
+        out: List[Optional[FuncInfo]] = [None]
+        for fns in index.functions.values():
+            for f in fns:
+                if f.module is mod and not isinstance(f.node, ast.Lambda):
+                    out.append(f)
+        return out
+
+    @staticmethod
+    def _is_cache_get(node: ast.AST) -> bool:
+        if not isinstance(node, ast.Call) or len(node.args) != 2:
+            return False
+        if not isinstance(node.func, ast.Attribute) \
+                or node.func.attr != "get":
+            return False
+        recv = dotted_name(node.func.value) or ""
+        return "cache" in recv.lower()
+
+    # ------------------------------------------------------------------
+    def _check_site(self, index, config, mod, fn, call: ast.Call
+                    ) -> List[Finding]:
+        key_expr, builder_expr = call.args
+        builder = self._resolve_builder(index, mod, fn, builder_expr, {})
+        if builder is None:
+            return []
+        builder_name, kwargs = builder
+        collector = _AtomCollector(index)
+        collector.collect(key_expr, fn, mod)
+        key_atoms = collector.atoms
+        out: List[Finding] = []
+        symbol = fn.qualname if fn is not None else ""
+        for kw_name, kw_value in kwargs.items():
+            if kw_name in config.r2_ignore_kwargs:
+                continue
+            if _is_literal(kw_value):
+                continue          # pinned at the call site (distinct tag)
+            atoms = _value_atoms(kw_value)
+            if atoms and not (atoms & key_atoms):
+                src = ast.unparse(kw_value)
+                out.append(self.finding(
+                    mod, call,
+                    f"builder `{builder_name}` knob `{kw_name}` (passed "
+                    f"as `{src}`) does not reach the cache key — two "
+                    f"configurations differing only in `{kw_name}` would "
+                    f"collide on one compiled entry; add it (or a "
+                    f"signature of it) to the key tuple",
+                    symbol=symbol))
+        return out
+
+    # ------------------------------------------------------------------
+    def _resolve_builder(self, index, mod, fn, expr,
+                         kwargs: Dict[str, ast.AST], depth: int = 0
+                         ) -> Optional[Tuple[str, Dict[str, ast.AST]]]:
+        """(builder name, merged kwargs) behind ``expr``, chasing locals,
+        ``self.<attr>`` assignments and nested partials."""
+        if depth > _MAX_DEPTH:
+            return None
+        if isinstance(expr, ast.Call):
+            cname = call_name(expr) or ""
+            if cname.split(".")[-1] == "partial" and expr.args:
+                merged = dict(kwargs)
+                for kw in expr.keywords:
+                    if kw.arg is not None and kw.arg not in merged:
+                        merged[kw.arg] = kw.value
+                return self._resolve_builder(index, mod, fn, expr.args[0],
+                                             merged, depth + 1)
+            return None
+        if isinstance(expr, ast.Name):
+            if fn is not None:
+                for value in _local_assignments(fn).get(expr.id, ()):
+                    hit = self._resolve_builder(index, mod, fn, value,
+                                                kwargs, depth + 1)
+                    if hit is not None:
+                        return hit
+            # a bare function name: the builder takes no knobs here
+            if index.functions.get(expr.id):
+                return (expr.id, kwargs) if kwargs else None
+            return None
+        if isinstance(expr, ast.Attribute):
+            if isinstance(expr.value, ast.Name) and expr.value.id == "self" \
+                    and fn is not None and fn.class_name:
+                attrs = _class_attr_assignments(index, fn.class_name)
+                for value, meth in attrs.get(expr.attr, ()):
+                    hit = self._resolve_builder(index, meth.module, meth,
+                                                value, kwargs, depth + 1)
+                    if hit is not None:
+                        return hit
+            name = dotted_name(expr)
+            if name is not None and index.functions.get(
+                    name.split(".")[-1]):
+                return (name, kwargs) if kwargs else None
+            return None
+        return None

@@ -1,0 +1,148 @@
+"""R3 kernel house-pattern: every Pallas kernel ships the full package.
+
+``src/repro/kernels/<name>/`` is a *contract*, not a convention: the
+compiled kernel (``<name>.py``), a pure-jnp reference (``ref.py``) the
+parity tests diff against, a dispatch layer (``ops.py``) that falls back
+to the reference off-TPU, an export through ``kernels/__init__.py`` so
+callers never deep-import, a block-size row in the autotune table, and a
+parity test that actually exercises it.  A kernel missing any leg is
+either untestable, unreachable, or silently mistuned — R3 checks all
+five legs per kernel directory.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set
+
+from tools.tracelint.core import (Finding, ModuleInfo, ProjectIndex, Rule,
+                                  register)
+
+_REQUIRED_FILES = ("{name}.py", "ref.py", "ops.py")
+
+
+def _kernel_dirs(index: ProjectIndex, pkg: str) -> Dict[str, List[ModuleInfo]]:
+    """kernel dir name -> modules inside ``<pkg>/<name>/``."""
+    out: Dict[str, List[ModuleInfo]] = {}
+    prefix = pkg.rstrip("/") + "/"
+    for mod in index.modules:
+        if not mod.rel.startswith(prefix):
+            continue
+        rest = mod.rel[len(prefix):]
+        parts = rest.split("/")
+        if len(parts) == 2:                 # <name>/<file>.py
+            out.setdefault(parts[0], []).append(mod)
+    return out
+
+
+def _exported_names(init_mod: Optional[ModuleInfo]) -> Set[str]:
+    """Names ``kernels/__init__.py`` makes importable: from-imports,
+    ``__all__`` strings, and string keys/values of module-level dict
+    literals (the lazy ``__getattr__`` table idiom)."""
+    if init_mod is None:
+        return set()
+    names: Set[str] = set()
+    for node in ast.walk(init_mod.tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            names.update(node.module.split("."))
+            names.update(a.asname or a.name for a in node.names)
+        elif isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets
+                       if isinstance(t, ast.Name)]
+            if not targets:
+                continue
+            for c in ast.walk(node.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    names.add(c.value)
+    return names
+
+
+def _table_kernels(autotune_mod: Optional[ModuleInfo]) -> Set[str]:
+    """First elements of tuple keys in autotune's module-level TABLE."""
+    if autotune_mod is None:
+        return set()
+    out: Set[str] = set()
+    for node in ast.walk(autotune_mod.tree):
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign):
+            targets = [node.target]
+        else:
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == "TABLE"
+                   for t in targets):
+            continue
+        if node.value is None or not isinstance(node.value, ast.Dict):
+            continue
+        for key in node.value.keys:
+            if isinstance(key, ast.Tuple) and key.elts:
+                first = key.elts[0]
+                if isinstance(first, ast.Constant) \
+                        and isinstance(first.value, str):
+                    out.add(first.value)
+    return out
+
+
+@register
+class KernelPatternRule(Rule):
+    id = "R3"
+    name = "kernel-house-pattern"
+    doc = ("each kernels/<name>/ package ships <name>.py/ref.py/ops.py, "
+           "an __init__ export, an autotune row and a parity test")
+
+    def check(self, index: ProjectIndex, config) -> List[Finding]:
+        pkg = config.kernels_package
+        dirs = _kernel_dirs(index, pkg)
+        init_mod = index.by_rel.get(f"{pkg}/__init__.py")
+        autotune_mod = index.by_rel.get(f"{pkg}/autotune.py")
+        exported = _exported_names(init_mod)
+        tuned = _table_kernels(autotune_mod)
+        test_sources = [
+            m for m in index.modules
+            if any(m.rel.startswith(d.rstrip("/") + "/")
+                   for d in config.tests_dirs)
+            and os.path.basename(m.rel).startswith("test")]
+
+        findings: List[Finding] = []
+        for name in sorted(dirs):
+            if name in config.r3_exempt:
+                continue
+            mods = dirs[name]
+            anchor = self._anchor(mods, name)
+            have = {os.path.basename(m.rel) for m in mods}
+            for req in _REQUIRED_FILES:
+                fname = req.format(name=name)
+                if fname not in have:
+                    findings.append(self.finding(
+                        anchor, anchor.tree,
+                        f"kernel `{name}` is missing `{pkg}/{name}/"
+                        f"{fname}` — the house pattern requires the "
+                        f"kernel, a jnp reference, and a dispatch layer"))
+            if name not in exported:
+                where = f"{pkg}/__init__.py" if init_mod else \
+                    f"{pkg}/__init__.py (not found)"
+                findings.append(self.finding(
+                    anchor, anchor.tree,
+                    f"kernel `{name}` is not exported from {where} — "
+                    f"callers must reach it via the kernels package, not "
+                    f"deep imports"))
+            if name not in tuned:
+                findings.append(self.finding(
+                    anchor, anchor.tree,
+                    f"kernel `{name}` has no row in {pkg}/autotune.py "
+                    f"TABLE — block sizes must come from the shared "
+                    f"table, not ad-hoc constants"))
+            if not any(name in m.source for m in test_sources):
+                findings.append(self.finding(
+                    anchor, anchor.tree,
+                    f"kernel `{name}` is never mentioned in any "
+                    f"{'/'.join(config.tests_dirs)} test module — every "
+                    f"kernel needs a kernel-vs-reference parity test"))
+        return findings
+
+    @staticmethod
+    def _anchor(mods: List[ModuleInfo], name: str) -> ModuleInfo:
+        for m in mods:
+            if os.path.basename(m.rel) == f"{name}.py":
+                return m
+        return sorted(mods, key=lambda m: m.rel)[0]

@@ -1,0 +1,65 @@
+"""R4 tracer-branch heuristic: no Python control flow on traced values.
+
+``if``/``while`` (and conditional expressions) on a value derived from a
+traced function's *arguments* raise ``TracerBoolConversionError`` at
+trace time — or worse, silently specialize the program to one branch when
+the value happens to be concrete during tracing.  The house pattern is
+``jnp.where`` / ``lax.cond`` / ``lax.select``.
+
+Branching on *closure* configuration (``if use_kernels:``,
+``if p2 is not None:``) is the builder idiom and is NOT flagged: only
+names tainted by the traced function's own parameters count, and
+static-metadata tests (``x.shape``, ``x is None``, ``isinstance``) are
+exempt — those are resolved once at trace time by design.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.tracelint.core import (Finding, ProjectIndex, Rule, register,
+                                  walk_skipping_funcs)
+from tools.tracelint.traced import discover, only_static_uses, tainted_locals
+
+
+@register
+class TracerBranchRule(Rule):
+    id = "R4"
+    name = "tracer-branch"
+    doc = ("no Python if/while on traced-array-derived expressions inside "
+           "traced functions (use jnp.where / lax.cond)")
+
+    def check(self, index: ProjectIndex, config) -> List[Finding]:
+        traced = discover(index, config.trace_roots)
+        findings: List[Finding] = []
+        for fn in traced:
+            if isinstance(fn.node, ast.Lambda):
+                continue                      # no if/while statements
+            tainted = tainted_locals(fn, traced)
+            if not tainted:
+                continue
+            why = traced.reason(fn)
+            for node in walk_skipping_funcs(fn.node):
+                test = None
+                kind = ""
+                if isinstance(node, (ast.If, ast.While)):
+                    test, kind = node.test, type(node).__name__.lower()
+                elif isinstance(node, ast.IfExp):
+                    test, kind = node.test, "conditional expression"
+                elif isinstance(node, ast.Assert):
+                    test, kind = node.test, "assert"
+                if test is None:
+                    continue
+                hits = sorted({n.id for n in ast.walk(test)
+                               if isinstance(n, ast.Name)
+                               and n.id in tainted})
+                if not hits or only_static_uses(test, tainted):
+                    continue
+                findings.append(self.finding(
+                    fn.module, node,
+                    f"Python {kind} on traced value(s) {', '.join(hits)} "
+                    f"inside traced `{fn.qualname}` ({why}) — this "
+                    f"branches at trace time, not per element; use "
+                    f"jnp.where / lax.cond",
+                    symbol=fn.qualname))
+        return findings

@@ -1,0 +1,173 @@
+"""R5 bench-timing: timed regions must synchronize with the device.
+
+JAX dispatch is asynchronous — ``fn(x)`` returns as soon as the work is
+*enqueued*.  A ``perf_counter()`` pair around device work without a
+``block_until_ready`` (or ``device_get``) in between times the enqueue,
+not the compute: the published latency numbers (the paper's headline
+claim) would be fiction.  R5 scans benchmark modules for consecutive
+``perf_counter`` reads in the same statement list and requires a sync
+call between them whenever the region contains a call that is not on the
+host-safe list.  Regions that are genuinely host-only (timing a dict
+lookup) produce no finding; regions that sync *inside* the called
+function are allowlist material, with the reason written down.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from tools.tracelint.core import (Finding, ModuleInfo, ProjectIndex, Rule,
+                                  call_name, register)
+
+_CLOCKS = ("perf_counter", "perf_counter_ns", "monotonic", "monotonic_ns",
+           "process_time", "time")
+
+
+def _is_clock_read(node: ast.AST, mod: ModuleInfo) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    cname = call_name(node)
+    if cname is None:
+        return False
+    leaf = cname.split(".")[-1]
+    if leaf not in _CLOCKS:
+        return False
+    return mod.expanded(cname).startswith("time.")
+
+
+def _stmt_lists(tree: ast.AST):
+    """Every statement list in the module (module body, function bodies,
+    loop/if/with bodies) — clock pairs are matched within one list."""
+    for node in ast.walk(tree):
+        for attr in ("body", "orelse", "finalbody"):
+            stmts = getattr(node, attr, None)
+            if isinstance(stmts, list) and stmts \
+                    and isinstance(stmts[0], ast.stmt):
+                yield stmts
+
+
+def _walk_stmt(stmt: ast.stmt):
+    """Walk one statement without descending into nested function/lambda
+    definitions — a ``def`` between two clock reads does not execute."""
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return
+    stack: List[ast.AST] = [stmt]
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _clock_var(stmt: ast.stmt) -> Optional[str]:
+    """The name a clock read is assigned to (``t0 = perf_counter()``)."""
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+            and isinstance(stmt.targets[0], ast.Name):
+        return stmt.targets[0].id
+    return None
+
+
+def _names_in(stmt: ast.stmt):
+    return {n.id for n in _walk_stmt(stmt) if isinstance(n, ast.Name)}
+
+
+def _is_region(stmts: List[ast.stmt], a: int, b: int) -> bool:
+    """Is the clock pair (a, b) a deliberate timed region — as opposed to
+    the gap between two unrelated regions?  Yes when the second read's
+    statement uses the first read's variable (``dt = pc() - t0``), or a
+    later statement combines both variables (``times.append(t1 - t0)``)."""
+    va = _clock_var(stmts[a])
+    if va is None:
+        return False
+    if va in _names_in(stmts[b]):
+        return True
+    vb = _clock_var(stmts[b])
+    if vb is None:
+        return False
+    return any({va, vb} <= _names_in(s) for s in stmts[b + 1:])
+
+
+def _self_syncing_helpers(tree: ast.AST, config) -> set:
+    """Names of functions defined in this module whose own body contains
+    a sync call — ``def plan_blocking(...): ...block_until_ready...`` is
+    the house idiom, and calling it inside a timed region IS the sync."""
+    out = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                cname = call_name(sub)
+                if cname is not None and \
+                        cname.split(".")[-1] in config.r5_sync_calls:
+                    out.add(node.name)
+                    break
+    return out
+
+
+def _classify_calls(stmts: List[ast.stmt], config, syncing: set
+                    ) -> Tuple[bool, Optional[ast.Call]]:
+    """(has_sync, first_unsafe_call) over all calls inside ``stmts``."""
+    has_sync = False
+    unsafe: Optional[ast.Call] = None
+    for stmt in stmts:
+        for node in _walk_stmt(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = call_name(node)
+            if cname is None:
+                continue         # e.g. fns[i](x): opaque, treat as unsafe
+            parts = cname.split(".")
+            if parts[-1] in config.r5_sync_calls \
+                    or (len(parts) == 1 and parts[0] in syncing):
+                has_sync = True
+                continue
+            if parts[0] in config.r5_host_safe \
+                    or parts[-1] in config.r5_host_safe:
+                continue
+            if unsafe is None:
+                unsafe = node
+    return has_sync, unsafe
+
+
+@register
+class BenchTimingRule(Rule):
+    id = "R5"
+    name = "bench-timing"
+    doc = ("perf_counter pairs around device work in benchmarks/ need a "
+           "block_until_ready between them")
+
+    def check(self, index: ProjectIndex, config) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in index.modules:
+            if not any(mod.rel.startswith(d.rstrip("/") + "/")
+                       for d in config.bench_dirs):
+                continue
+            findings.extend(self._check_module(mod, config))
+        return findings
+
+    def _check_module(self, mod: ModuleInfo, config) -> List[Finding]:
+        out: List[Finding] = []
+        syncing = _self_syncing_helpers(mod.tree, config)
+        for stmts in _stmt_lists(mod.tree):
+            clock_idx = [i for i, s in enumerate(stmts)
+                         if any(_is_clock_read(n, mod)
+                                for n in _walk_stmt(s))]
+            for a, b in zip(clock_idx, clock_idx[1:]):
+                between = stmts[a + 1:b]
+                if not between or not _is_region(stmts, a, b):
+                    continue
+                has_sync, unsafe = _classify_calls(between, config,
+                                                   syncing)
+                if has_sync or unsafe is None:
+                    continue
+                uname = call_name(unsafe) or "<call>"
+                out.append(self.finding(
+                    mod, stmts[b],
+                    f"timed region (clock reads at lines "
+                    f"{stmts[a].lineno} and {stmts[b].lineno}) calls "
+                    f"`{uname}()` with no block_until_ready before the "
+                    f"second read — async dispatch means this times the "
+                    f"enqueue, not the compute"))
+        return out

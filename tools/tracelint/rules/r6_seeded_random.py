@@ -1,0 +1,52 @@
+"""R6 seeded-randomness: no legacy global numpy RNG, anywhere.
+
+The repo's determinism story (chaos schedules, gateway arrivals, fleet
+initial states) is built on ``np.random.Generator`` seeded through
+``SeedSequence([seed, index])`` — independent, replayable streams.  A
+single ``np.random.rand()`` call punches through that: it draws from the
+process-global legacy state, so results depend on import order and on
+every other draw in the process.  R6 flags any use of the legacy
+``numpy.random`` module-level API (``rand``, ``normal``, ``seed``, ...);
+the ``Generator`` constructors (``default_rng``, ``SeedSequence``, bit
+generators) are the discipline itself and are allowed.  Methods on a
+``Generator`` instance (``rng.normal``) never match — they are not
+attributes of the ``numpy.random`` module.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.tracelint.core import (Finding, ProjectIndex, Rule, call_name,
+                                  register)
+
+
+@register
+class SeededRandomRule(Rule):
+    id = "R6"
+    name = "seeded-randomness"
+    doc = ("no bare np.random.<fn>; use Generator/SeedSequence "
+           "(SeedSequence([seed, idx]) house convention)")
+
+    def check(self, index: ProjectIndex, config) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in index.modules:
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                cname = call_name(node)
+                if cname is None:
+                    continue
+                expanded = mod.expanded(cname)
+                if not expanded.startswith("numpy.random."):
+                    continue
+                leaf = expanded.split(".")[-1]
+                if leaf in config.r6_allowed:
+                    continue
+                findings.append(self.finding(
+                    mod, node,
+                    f"legacy global-state RNG `{cname}()` "
+                    f"(= numpy.random.{leaf}) — draws depend on process-"
+                    f"global state; use np.random.default_rng(...) / the "
+                    f"SeedSequence([seed, idx]) convention"))
+        return findings
